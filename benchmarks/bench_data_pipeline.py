@@ -1,0 +1,50 @@
+"""Fig 9: data-pipeline overlap — actor-runtime prefetch vs synchronous.
+
+A consumer with fixed per-batch compute iterates both pipelines; the actor
+version (2 out-registers per stage, paper §4.3) should approach the
+synthetic-data bound. derived: tokens/s and the bound."""
+import sys
+import time
+
+
+def main():
+    import numpy as np
+
+    sys.path.insert(0, "src")
+    from benchmarks._util import emit
+    from repro.data.pipeline import (ActorDataPipeline, SyncDataPipeline,
+                                     SyntheticLM)
+
+    vocab, batch, seq, n = 1024, 8, 512, 30
+    compute_s = 0.01             # simulated train-step time
+
+    def consume(pipe):
+        t0 = time.perf_counter()
+        for tokens in pipe:
+            # "training step": fixed compute + a touch of the data
+            assert tokens.shape == (batch, seq + 1)
+            time.sleep(compute_s)
+            _ = tokens.sum()
+        return time.perf_counter() - t0
+
+    def loader(i, _rng=np.random.default_rng(0)):
+        # real loading cost: zipf sampling is deliberately expensive
+        z = _rng.zipf(1.3, size=(batch, seq + 1))
+        return (z % vocab).astype(np.int32)
+
+    sync_t = consume(SyncDataPipeline(loader, n))
+    actor_t = consume(ActorDataPipeline(loader, n, buffers=2))
+    bound_t = n * compute_s     # synthetic-data case: compute only
+
+    toks = n * batch * seq
+    emit("data_pipeline/sync", sync_t / n * 1e6,
+         f"tok_s={toks/sync_t:.0f}")
+    emit("data_pipeline/actor_prefetch", actor_t / n * 1e6,
+         f"tok_s={toks/actor_t:.0f};overlap_eff="
+         f"{min(1.0, bound_t/actor_t):.2f}")
+    emit("data_pipeline/synthetic_bound", bound_t / n * 1e6,
+         f"tok_s={toks/bound_t:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Multi-device benchmarks run in
+subprocesses with placeholder host devices (the main process keeps 1 device).
+
+  Table 2  -> bench_boxing_cost           (subprocess, 8 devices)
+  Fig 6    -> bench_pipeline_registers    (in-process, simulator)
+  Fig 9    -> bench_data_pipeline         (in-process, threads)
+  Fig 10   -> bench_parallelisms dp8      (subprocess, 8 devices)
+  Fig 11/12-> bench_model_parallel_softmax(subprocess, 8 devices)
+  Fig 13   -> bench_embedding_mp          (subprocess, 8 devices)
+  Fig 15   -> bench_parallelisms zero8    (subprocess, 8 devices)
+  Fig 16   -> bench_parallelisms hybrid   (subprocess, 8 devices)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import bench_data_pipeline, bench_pipeline_registers
+    from benchmarks._util import run_subprocess_bench
+
+    failures = []
+
+    def run(label, fn):
+        try:
+            fn()
+        except Exception as e:
+            failures.append((label, repr(e)))
+            traceback.print_exc(file=sys.stderr)
+
+    run("pipeline_registers", bench_pipeline_registers.main)
+    run("data_pipeline", bench_data_pipeline.main)
+    for mod in ("bench_boxing_cost", "bench_model_parallel_softmax",
+                "bench_embedding_mp", "bench_parallelisms"):
+        run(mod, lambda m=mod: run_subprocess_bench(m, devices=8))
+
+    if failures:
+        print(f"# {len(failures)} benchmark failures: {failures}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

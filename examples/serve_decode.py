@@ -1,0 +1,71 @@
+"""Serving example: batched prefill + greedy decode with a seq-sharded KV
+cache (GQA) or latent cache (MLA).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch deepseek-v2-lite-16b
+    PYTHONPATH=src python examples/serve_decode.py --arch jamba-v0.1-52b
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.models.model_zoo import build_model
+    from repro.train.steps import make_serve_step, plan_from_mesh
+
+    cfg = get_config(args.arch).reduced()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ss = make_serve_step(cfg, mesh, cache_len=args.prompt_len + args.gen + 8)
+    params = build_model(cfg, plan_from_mesh(mesh)).init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    batch = {}
+    if cfg.embed_frontend and not cfg.encoder_decoder:
+        batch["embeds"] = jnp.asarray(rng.normal(
+            size=(args.batch, args.prompt_len, cfg.d_model)).astype(np.float32))
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+    if cfg.encoder_decoder:
+        batch["enc_embeds"] = jnp.asarray(rng.normal(
+            size=(args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32))
+
+    t0 = time.time()
+    h_last, caches = ss.prefill_fn(params, batch)
+    jax.block_until_ready(h_last)
+    print(f"{args.arch}: prefill {args.batch}x{args.prompt_len} "
+          f"in {time.time()-t0:.2f}s")
+
+    tok = jnp.argmax(h_last[:, 0] @ params["unembed"], -1).astype(jnp.int32)
+    pos = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(args.gen):
+        logits, caches = ss.decode_fn(params, caches, tok, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+        pos = pos + 1
+    jax.block_until_ready(tok)
+    gen = np.stack(out, 1)
+    print(f"decoded {args.gen} tokens/seq in {time.time()-t0:.2f}s")
+    print("row 0 ids:", gen[0])
+    assert np.isfinite(gen).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""GlobalTensor — the user-facing "consistent tensor" API (paper §3.4, Table 4).
+
+A :class:`GlobalTensor` pairs a physical ``jax.Array`` with a
+(:class:`Placement`, :class:`NdSbp`) annotation. Ops on GlobalTensors infer the
+output SBP from the deduction rules and execute the *local* computation under
+``shard_map``; :meth:`to_global` is OneFlow's ``to_consistent`` — an explicit
+boxing op changing sbp (and in the future, placement).
+
+Unlike the graph/planner path (compile whole graphs), this is the eager path:
+each op immediately builds and runs its one-op physical program. Partial-value
+tensors are kept as physically-unreduced arrays stacked on a leading mesh-axis
+dimension? No — they stay *sharded semantics*: the jax.Array is laid out
+replicated but each replica holds a different partial term, which we track via
+``_partial_context`` (only valid while staying inside this module's ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.core.boxing import boxing_fn
+from repro.core.placement import Placement
+from repro.core.sbp import B, Broadcast, NdSbp, Partial, Split, ndsbp
+
+
+@dataclasses.dataclass
+class GlobalTensor:
+    """A logically-global tensor physically laid out per (placement, sbp)."""
+
+    data: jax.Array                 # the *global* array view (addressable layout)
+    placement: Placement
+    sbp: NdSbp
+    mesh: object                    # jax.sharding.Mesh
+    logical_shape: Tuple[int, ...]
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def from_global(array, placement: Placement, sbp: Union[str, NdSbp],
+                    mesh=None) -> "GlobalTensor":
+        """Place a host/global array with the given SBP (paper: flow.randn(...,
+        placement=..., sbp=...))."""
+        sbp = ndsbp(sbp)
+        mesh = mesh if mesh is not None else placement.to_mesh()
+        if sbp.has_partial:
+            raise ValueError("cannot construct a partial-value tensor from a "
+                             "global array; partials arise from ops")
+        sbp.validate_for_shape(array.shape, placement.mesh_shape())
+        sharding = jax.sharding.NamedSharding(mesh, placement.partition_spec(sbp))
+        arr = jax.device_put(array, sharding)
+        return GlobalTensor(arr, placement, sbp, mesh, tuple(array.shape))
+
+    # -- conversion (to_consistent / boxing) ----------------------------------
+    def to_global(self, sbp: Union[str, NdSbp]) -> "GlobalTensor":
+        """Explicit boxing: transform to a new SBP on the same placement."""
+        dst = ndsbp(sbp)
+        if dst == self.sbp:
+            return self
+        dst.validate_for_shape(self.logical_shape, self.placement.mesh_shape())
+        if dst.has_partial:
+            raise ValueError("to_global target with partial-value is not "
+                             "materializable at the API boundary")
+        axis_names = self.placement.axis_names
+        mesh_shape = self.placement.mesh_shape()
+        fn = boxing_fn(self.sbp, dst, axis_names, mesh_shape, self.logical_shape)
+        out = jax.jit(jax.shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self._pspec(self.sbp),),
+            out_specs=self._pspec(dst), check_vma=False))(self.data)
+        return GlobalTensor(out, self.placement, dst, self.mesh, self.logical_shape)
+
+    def _pspec(self, sbp: NdSbp) -> PartitionSpec:
+        """PartitionSpec for shard_map; Partial maps to replicated layout
+        (each replica holds one partial term)."""
+        cleaned = NdSbp(tuple(Broadcast() if c.is_partial else c for c in sbp))
+        return self.placement.partition_spec(cleaned)
+
+    # -- numpy-ish ----------------------------------------------------------
+    def numpy(self):
+        """Materialize the logical value (reduces partials if any)."""
+        if self.sbp.has_partial:
+            return self.to_global(NdSbp(tuple(
+                Broadcast() if c.is_partial else c
+                for c in self.sbp)))._materialize_partial_free()
+        return self._materialize_partial_free()
+
+    def _materialize_partial_free(self):
+        import numpy as np
+        return np.asarray(jax.device_get(self.data))
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.logical_shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def __repr__(self):
+        return (f"GlobalTensor(shape={self.logical_shape}, sbp={self.sbp}, "
+                f"placement={self.placement})")
+
+
+# ---------------------------------------------------------------------------
+# Eager consistent ops (enough to express the paper's Table 4 program).
+# ---------------------------------------------------------------------------
+
+def _deduce_matmul(sx: NdSbp, sw: NdSbp) -> NdSbp:
+    """Apply Table 1 per mesh axis; raises if a (sx,sw) pair has no rule."""
+    out = []
+    for cx, cw in zip(sx, sw):
+        if isinstance(cx, Split) and cx.axis == 0 and cw.is_broadcast:
+            out.append(Split(0))
+        elif cx.is_broadcast and isinstance(cw, Split) and cw.axis == 1:
+            out.append(Split(1))
+        elif isinstance(cx, Split) and cx.axis == 1 and isinstance(cw, Split) and cw.axis == 0:
+            out.append(Partial("sum"))
+        elif cx.is_partial and cw.is_broadcast:
+            out.append(Partial("sum"))
+        elif cx.is_broadcast and cw.is_partial:
+            out.append(Partial("sum"))
+        elif cx.is_broadcast and cw.is_broadcast:
+            out.append(Broadcast())
+        else:
+            raise ValueError(f"matmul: no Table-1 rule for X:{cx}, W:{cw}")
+    return NdSbp(tuple(out))
+
+
+def matmul(x: GlobalTensor, w: GlobalTensor) -> GlobalTensor:
+    """Consistent matmul: output SBP deduced per Table 1; local dot under
+    shard_map; partial-value output stays unreduced (deferred reduction §3.3)."""
+    if x.placement != w.placement:
+        raise ValueError("cross-placement matmul requires boxing via to_global")
+    out_sbp = _deduce_matmul(x.sbp, w.sbp)
+    out_shape = (x.logical_shape[0], w.logical_shape[1])
+
+    def local(xl, wl):
+        return jnp.dot(xl, wl)
+
+    fn = jax.jit(jax.shard_map(
+        local, mesh=x.mesh,
+        in_specs=(x._pspec(x.sbp), w._pspec(w.sbp)),
+        out_specs=x._pspec(out_sbp), check_vma=False))
+    data = fn(x.data, w.data)
+    return GlobalTensor(data, x.placement, out_sbp, x.mesh, out_shape)
+
+
+def reduce_partial(x: GlobalTensor) -> GlobalTensor:
+    """Materialize partial-value axes to broadcast (an all-reduce boxing)."""
+    if not x.sbp.has_partial:
+        return x
+    axis_names = x.placement.axis_names
+    mesh_shape = x.placement.mesh_shape()
+    dst = NdSbp(tuple(Broadcast() if c.is_partial else c for c in x.sbp))
+    fn = boxing_fn(x.sbp, dst, axis_names, mesh_shape, x.logical_shape)
+    out = jax.jit(jax.shard_map(
+        fn, mesh=x.mesh, in_specs=(x._pspec(x.sbp),),
+        out_specs=x._pspec(dst), check_vma=False))(x.data)
+    return GlobalTensor(out, x.placement, dst, x.mesh, x.logical_shape)

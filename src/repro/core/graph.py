@@ -1,0 +1,141 @@
+"""Logical computation graph IR (paper §2/§3: logical graph -> physical plan).
+
+A :class:`LogicalGraph` is a DAG of :class:`LTensor` values produced by ops
+from the registry in :mod:`repro.core.ops`. Tensors may be *pinned* to a
+specific NdSbp (the user's annotations, paper Table 4); the planner fills in
+the rest minimizing Table-2 boxing cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core import ops as ops_mod
+from repro.core.placement import Placement
+from repro.core.sbp import NdSbp, ndsbp
+
+
+_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class LTensor:
+    """A logical tensor: symbolic value in the graph."""
+
+    graph: "LogicalGraph"
+    shape: Tuple[int, ...]
+    dtype: str
+    name: str
+    producer: Optional["LOp"] = None
+    pinned_sbp: Optional[NdSbp] = None
+
+    @property
+    def itemsize(self) -> int:
+        return {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4,
+                "int64": 8, "int8": 1}[self.dtype]
+
+    @property
+    def nbytes(self) -> int:
+        n = self.itemsize
+        for s in self.shape:
+            n *= s
+        return n
+
+    def pin(self, sbp: Union[str, NdSbp]) -> "LTensor":
+        self.pinned_sbp = ndsbp(sbp)
+        self.pinned_sbp.validate_for_shape(self.shape, self.graph.placement.mesh_shape())
+        return self
+
+    def __repr__(self):
+        return f"LTensor({self.name}:{self.dtype}{list(self.shape)})"
+
+
+@dataclasses.dataclass
+class LOp:
+    """A logical op instance in the graph."""
+
+    spec: ops_mod.OpSpec
+    inputs: Tuple[LTensor, ...]
+    output: LTensor
+    name: str
+
+    def __repr__(self):
+        ins = ", ".join(t.name for t in self.inputs)
+        return f"LOp({self.name}: {self.spec.name}({ins}) -> {self.output.name})"
+
+
+class LogicalGraph:
+    """Builder + container for the logical DAG."""
+
+    def __init__(self, placement: Placement):
+        self.placement = placement
+        self.tensors: List[LTensor] = []
+        self.ops: List[LOp] = []
+        self.inputs: List[LTensor] = []
+
+    # -- construction ------------------------------------------------------
+    def input(self, name: str, shape: Sequence[int], dtype: str = "float32",
+              sbp: Optional[Union[str, NdSbp]] = None) -> LTensor:
+        t = LTensor(self, tuple(shape), dtype, name)
+        if sbp is not None:
+            t.pin(sbp)
+        self.tensors.append(t)
+        self.inputs.append(t)
+        return t
+
+    def apply(self, op_name: str, inputs: Sequence[LTensor],
+              attrs: Optional[Dict] = None, out_dtype: Optional[str] = None,
+              name: Optional[str] = None) -> LTensor:
+        opdef = ops_mod.get(op_name)
+        if len(inputs) != opdef.n_in:
+            raise ValueError(f"{op_name} expects {opdef.n_in} inputs")
+        spec = ops_mod.OpSpec(opdef, dict(attrs or {}))
+        out_shape = opdef.infer_shape(spec, [t.shape for t in inputs])
+        idx = next(_counter)
+        oname = name or f"{op_name}_{idx}"
+        out = LTensor(self, tuple(out_shape), out_dtype or inputs[0].dtype,
+                      f"{oname}.out")
+        op = LOp(spec, tuple(inputs), out, oname)
+        out.producer = op
+        self.tensors.append(out)
+        self.ops.append(op)
+        return out
+
+    # -- sugar ---------------------------------------------------------------
+    def matmul(self, x: LTensor, w: LTensor, name=None) -> LTensor:
+        return self.apply("matmul", [x, w], name=name)
+
+    def add(self, a: LTensor, b: LTensor, name=None) -> LTensor:
+        return self.apply("ew_binary", [a, b],
+                          attrs={"ndim": len(a.shape), "op": "add"}, name=name)
+
+    def unary(self, x: LTensor, fn: str = "relu", linear: bool = False,
+              name=None) -> LTensor:
+        return self.apply("ew_unary", [x],
+                          attrs={"ndim": len(x.shape), "fn": fn, "linear": linear},
+                          name=name)
+
+    def bias_add(self, x: LTensor, b: LTensor, name=None) -> LTensor:
+        return self.apply("bias_add", [x, b], name=name)
+
+    def softmax(self, x: LTensor, name=None) -> LTensor:
+        return self.apply("softmax", [x], attrs={"ndim": len(x.shape)}, name=name)
+
+    def reduce(self, x: LTensor, axis: int, op: str = "sum", name=None) -> LTensor:
+        return self.apply("reduce", [x],
+                          attrs={"ndim": len(x.shape), "axis": axis, "op": op},
+                          name=name)
+
+    def softmax_xent(self, logits: LTensor, labels: LTensor, name=None) -> LTensor:
+        return self.apply("softmax_xent", [logits, labels], name=name)
+
+    def embedding(self, table: LTensor, ids: LTensor, name=None) -> LTensor:
+        return self.apply("embedding", [table, ids], name=name)
+
+    # -- queries ---------------------------------------------------------------
+    def consumers(self, t: LTensor) -> List[LOp]:
+        return [op for op in self.ops if t in op.inputs]
+
+    def topo_ops(self) -> List[LOp]:
+        return list(self.ops)  # construction order is already topological

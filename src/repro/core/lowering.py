@@ -1,0 +1,209 @@
+"""Lowering — turn (LogicalGraph, Plan) into an executable SPMD program.
+
+This is the compiler's final stage (paper Fig 1/5): every op runs *locally* on
+its shard under ``shard_map``; wherever producer SBP != consumer SBP, the
+planner's boxing edge becomes an explicit ``jax.lax`` collective
+(:func:`repro.core.boxing.boxing_fn`). Partial-value tensors flow through as
+real unreduced per-device arrays, so deferred reduction (§3.3) happens exactly
+as planned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.core.boxing import boxing_fn
+from repro.core.graph import LogicalGraph, LOp
+from repro.core.planner import Plan
+from repro.core.sbp import Broadcast, NdSbp, Partial, Split
+
+
+def _split_axes_for(sig: NdSbp, tensor_axis: int, axis_names: Sequence[str]) -> List[str]:
+    """Mesh axis names on which ``tensor_axis`` is split under ``sig``."""
+    return [name for comp, name in zip(sig, axis_names)
+            if isinstance(comp, Split) and comp.axis == tensor_axis]
+
+
+def _partial_axes(sig: NdSbp, axis_names: Sequence[str]) -> List[str]:
+    return [name for comp, name in zip(sig, axis_names) if comp.is_partial]
+
+
+_UNARY_FNS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+    "neg": jnp.negative,
+    "identity": lambda x: x,
+    "scale2": lambda x: 2.0 * x,
+}
+
+
+def _local_op(op: LOp, in_sigs: Tuple[NdSbp, ...], out_sig: NdSbp,
+              axis_names: Sequence[str], mesh_shape: Sequence[int]):
+    """Return fn(local_inputs) -> local_output implementing op under the sigs."""
+    kind = op.spec.name
+    attrs = op.spec.attrs
+
+    if kind == "matmul":
+        def f(x, w):
+            return jnp.dot(x, w)
+        return f
+
+    if kind == "ew_binary":
+        opn = attrs.get("op", "add")
+        fn = {"add": jnp.add, "mul": jnp.multiply}[opn]
+        return fn
+
+    if kind == "ew_unary":
+        return _UNARY_FNS[attrs.get("fn", "identity")]
+
+    if kind == "bias_add":
+        return lambda x, b: x + b[None, :]
+
+    if kind == "reduce":
+        axis, red = attrs["axis"], attrs.get("op", "sum")
+        jfn = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}[red]
+        return lambda x: jfn(x, axis=axis, keepdims=True)
+
+    if kind == "softmax":
+        # hierarchical softmax (paper Fig 11b): local max/sum + global combine
+        red_axes = _split_axes_for(in_sigs[0], 1, axis_names)
+
+        def f(x):
+            m = jnp.max(x, axis=1, keepdims=True)
+            for ax in red_axes:
+                m = jax.lax.pmax(m, ax)
+            e = jnp.exp(x - m)
+            s = jnp.sum(e, axis=1, keepdims=True)
+            for ax in red_axes:
+                s = jax.lax.psum(s, ax)
+            return e / s
+        return f
+
+    if kind == "softmax_xent":
+        red_axes = _split_axes_for(in_sigs[0], 1, axis_names)
+        vocab_frac = 1
+        for name, size in zip(axis_names, mesh_shape):
+            if name in red_axes:
+                vocab_frac *= size
+        local_c = op.inputs[0].shape[1] // vocab_frac
+
+        def f(logits, labels):
+            m = jnp.max(logits, axis=1, keepdims=True)
+            for ax in red_axes:
+                m = jax.lax.pmax(m, ax)
+            e = jnp.exp(logits - m)
+            s = jnp.sum(e, axis=1, keepdims=True)
+            for ax in red_axes:
+                s = jax.lax.psum(s, ax)
+            # local gather of the label logit (zero when out of shard range)
+            if red_axes:
+                offset = jnp.zeros((), jnp.int32)
+                stride = 1
+                for name, size in reversed(list(zip(axis_names, mesh_shape))):
+                    if name in red_axes:
+                        offset = offset + jax.lax.axis_index(name) * stride * local_c
+                        stride *= size
+                local_ids = labels - offset
+                in_range = (local_ids >= 0) & (local_ids < local_c)
+                safe = jnp.clip(local_ids, 0, local_c - 1)
+                picked = jnp.take_along_axis(logits, safe[:, None], axis=1)
+                z = jnp.where(in_range[:, None], picked - m, 0.0)
+                # output is P(sum) over red_axes: exactly one shard contributes
+                return jnp.log(s) - z
+            z = jnp.take_along_axis(logits, labels[:, None], axis=1)
+            return jnp.log(s) - (z - m)
+        return f
+
+    if kind == "embedding":
+        red_axes = _split_axes_for(in_sigs[0], 0, axis_names)  # vocab split
+        hid_split = _split_axes_for(in_sigs[0], 1, axis_names)
+
+        def f(table, ids):
+            if red_axes:
+                local_v = table.shape[0]
+                offset = jnp.zeros((), jnp.int32)
+                stride = 1
+                for name, size in reversed(list(zip(axis_names, mesh_shape))):
+                    if name in red_axes:
+                        offset = offset + jax.lax.axis_index(name) * stride * local_v
+                        stride *= size
+                local_ids = ids - offset
+                in_range = (local_ids >= 0) & (local_ids < local_v)
+                safe = jnp.clip(local_ids, 0, local_v - 1)
+                out = table[safe]
+                return jnp.where(in_range[:, None], out, 0.0)  # P(sum)
+            return table[ids]
+        return f
+
+    raise NotImplementedError(f"no local lowering for op kind {kind}")
+
+
+def lower_plan(graph: LogicalGraph, plan: Plan, mesh) -> "PhysicalProgram":
+    axis_names = tuple(mesh.axis_names)
+    mesh_shape = tuple(mesh.devices.shape)
+
+    in_specs, out_specs = [], []
+    for t in graph.inputs:
+        sig = plan.tensor_sbp[t.name]
+        if sig.has_partial:
+            raise ValueError(f"graph input {t.name} planned as partial-value")
+        in_specs.append(graph.placement.partition_spec(sig))
+
+    consumed = set()
+    for op in graph.ops:
+        for t in op.inputs:
+            consumed.add(t.name)
+    sinks = [op.output for op in graph.ops if op.output.name not in consumed]
+    for t in sinks:
+        sig = plan.tensor_sbp[t.name]
+        if sig.has_partial:
+            raise ValueError(f"graph output {t.name} planned as partial-value; "
+                             "planner should have boxed it")
+        out_specs.append(graph.placement.partition_spec(sig))
+
+    def local_program(*local_inputs):
+        env = {t.name: v for t, v in zip(graph.inputs, local_inputs)}
+        for op in graph.topo_ops():
+            in_sigs = plan.op_in_sbp[op.name]
+            raw_sig = plan.op_out_sbp[op.name]
+            stored_sig = plan.tensor_sbp[op.output.name]
+            args = []
+            for t, want in zip(op.inputs, in_sigs):
+                have = plan.tensor_sbp[t.name]
+                v = env[t.name]
+                if have != want:
+                    v = boxing_fn(have, want, axis_names, mesh_shape, t.shape)(v)
+                args.append(v)
+            fn = _local_op(op, in_sigs, raw_sig, axis_names, mesh_shape)
+            val = fn(*args)
+            if raw_sig != stored_sig:  # epilogue boxing (e.g. P materialization)
+                val = boxing_fn(raw_sig, stored_sig, axis_names, mesh_shape,
+                                op.output.shape)(val)
+            env[op.output.name] = val
+        return tuple(env[t.name] for t in sinks)
+
+    mapped = jax.shard_map(local_program, mesh=mesh,
+                           in_specs=tuple(in_specs), out_specs=tuple(out_specs),
+                           check_vma=False)
+    return PhysicalProgram(graph, plan, mesh, mapped, sinks)
+
+
+class PhysicalProgram:
+    """Executable physical graph: shard_map program + metadata."""
+
+    def __init__(self, graph, plan, mesh, fn, sinks):
+        self.graph, self.plan, self.mesh = graph, plan, mesh
+        self._fn = jax.jit(fn)
+        self.sinks = sinks
+
+    def __call__(self, *global_inputs):
+        outs = self._fn(*global_inputs)
+        return outs if len(outs) > 1 else outs[0]
+
+    def lower(self, *global_inputs):
+        return self._fn.lower(*global_inputs)

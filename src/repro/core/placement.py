@@ -1,0 +1,110 @@
+"""Placement — which mesh axes / device groups a logical op runs on (paper §3).
+
+OneFlow's ``flow.placement("cuda", {0:[0,1]})`` names nodes and device ids. On a
+TPU pod the natural equivalent is a *named mesh* (axes like ``pod``, ``data``,
+``model``) plus, optionally, a sub-mesh selection. We keep placement lightweight:
+a named axis tuple + sizes, convertible to a real ``jax.sharding.Mesh`` lazily so
+importing this module never touches device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.sbp import Broadcast, NdSbp, Partial, Split
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """A named logical mesh: ``axis_names[i]`` has ``axis_sizes[i]`` devices."""
+
+    axis_names: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+    device_kind: str = "tpu"
+
+    def __post_init__(self):
+        if len(self.axis_names) != len(self.axis_sizes):
+            raise ValueError("axis_names and axis_sizes must align")
+        if len(set(self.axis_names)) != len(self.axis_names):
+            raise ValueError("duplicate mesh axis names")
+
+    @property
+    def ndim(self) -> int:
+        return len(self.axis_names)
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(self.axis_sizes)
+
+    def axis_size(self, name: str) -> int:
+        return self.axis_sizes[self.axis_names.index(name)]
+
+    def mesh_shape(self) -> Tuple[int, ...]:
+        return self.axis_sizes
+
+    def to_mesh(self, devices=None):
+        """Materialize a ``jax.sharding.Mesh`` (lazy jax import)."""
+        import jax
+        import numpy as np
+
+        if devices is None:
+            devices = jax.devices()
+        n = self.num_devices
+        if len(devices) < n:
+            raise ValueError(f"need {n} devices, have {len(devices)}")
+        arr = np.array(devices[:n]).reshape(self.axis_sizes)
+        return jax.sharding.Mesh(arr, self.axis_names)
+
+    # -- SBP -> PartitionSpec ---------------------------------------------------
+    def partition_spec(self, sbp: NdSbp):
+        """Lower an NdSbp on this placement to a ``jax.sharding.PartitionSpec``.
+
+        ``Partial`` is NOT representable as a PartitionSpec: partial-value only
+        exists *inside* a shard_map program (as unreduced per-device arrays).
+        Callers lowering graph *inputs/outputs* must first box P away.
+        """
+        from jax.sharding import PartitionSpec
+
+        if len(sbp) != self.ndim:
+            raise ValueError(f"{sbp} rank != placement rank {self.ndim}")
+        # tensor axis -> list of mesh axis names sharding it (order = mesh order)
+        per_axis: Dict[int, list] = {}
+        for comp, name in zip(sbp, self.axis_names):
+            if isinstance(comp, Partial):
+                raise ValueError(
+                    f"{sbp} contains partial-value; box it before lowering to "
+                    "PartitionSpec (P exists only inside shard_map)")
+            if isinstance(comp, Split):
+                per_axis.setdefault(comp.axis, []).append(name)
+        if not per_axis:
+            return PartitionSpec()
+        max_axis = max(per_axis)
+        entries = []
+        for ax in range(max_axis + 1):
+            names = per_axis.get(ax, [])
+            if not names:
+                entries.append(None)
+            elif len(names) == 1:
+                entries.append(names[0])
+            else:
+                entries.append(tuple(names))
+        return PartitionSpec(*entries)
+
+    def named_sharding(self, sbp: NdSbp, mesh=None):
+        import jax
+
+        mesh = mesh if mesh is not None else self.to_mesh()
+        return jax.sharding.NamedSharding(mesh, self.partition_spec(sbp))
+
+    def __repr__(self) -> str:
+        dims = ", ".join(f"{n}={s}" for n, s in zip(self.axis_names, self.axis_sizes))
+        return f"Placement[{self.device_kind}]({dims})"
+
+
+def single_pod_placement(data: int = 16, model: int = 16) -> Placement:
+    return Placement(("data", "model"), (data, model))
+
+
+def multi_pod_placement(pod: int = 2, data: int = 16, model: int = 16) -> Placement:
+    return Placement(("pod", "data", "model"), (pod, data, model))

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import (attention_dense_ref,
+                                               flash_attention_ref)

@@ -1,0 +1,224 @@
+"""Pure-jnp oracle for blocked (flash-style) attention.
+
+This is both the correctness reference for the Pallas kernel and the
+implementation the models lower through on CPU / in the dry-run (so XLA's
+cost analysis sees real attention FLOPs rather than a pallas_call black box).
+
+Causal masking is applied per block; all (q-block, kv-block) rectangles are
+computed (fixed trip counts keep the HLO static) — i.e. the baseline does 2x
+the causal-minimum attention FLOPs. This is deliberate and is called out in
+EXPERIMENTS.md §Roofline as optimization headroom.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _attend_block(q, k, v, mask, sm_scale):
+    """One (q-block, kv-block) rectangle with running softmax state.
+
+    q: (b, bq, h, d); k/v: (b, bk, h, d); mask: (bq, bk) or None.
+    Returns (scores_max, exp_scores@v, sumexp) contributions.
+    """
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * sm_scale
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    return s
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sliding_window: int = 0, q_offset: int = 0,
+                        block_q: int = 512, block_k: int = 512,
+                        sm_scale: Optional[float] = None):
+    """Blocked attention with online softmax.
+
+    q: (B, Sq, H, D);  k, v: (B, Sk, KV, D) with H % KV == 0 (GQA).
+    ``q_offset``: absolute position of q[0] (decode/prefill continuation).
+    ``sliding_window`` > 0 limits attention to the last W positions.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]            # MLA: value head dim may differ from qk dim
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    # pad to block multiples
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+
+    # GQA: expand kv heads to q heads (XLA fuses the broadcast into the dot)
+    kp = jnp.repeat(kp, G, axis=2)
+    vp = jnp.repeat(vp, G, axis=2)
+
+    q_pos = q_offset + jnp.arange(nq * block_q)
+    k_pos = jnp.arange(nk * block_k)
+
+    qb = qp.reshape(B, nq, block_q, H, D)
+    kb = kp.reshape(B, nk, block_k, H, D)
+    vb = vp.reshape(B, nk, block_k, H, Dv)
+
+    def q_block(carry, qi):
+        qi_q = jax.lax.dynamic_index_in_dim(qb, qi, axis=1, keepdims=False)
+        qpos = jax.lax.dynamic_slice_in_dim(q_pos, qi * block_q, block_q)
+
+        def kv_block(state, ki):
+            m, l, acc = state
+            k_i = jax.lax.dynamic_index_in_dim(kb, ki, axis=1, keepdims=False)
+            v_i = jax.lax.dynamic_index_in_dim(vb, ki, axis=1, keepdims=False)
+            kpos = jax.lax.dynamic_slice_in_dim(k_pos, ki * block_k, block_k)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi_q, k_i,
+                           preferred_element_type=jnp.float32) * sm_scale
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if sliding_window:
+                mask &= kpos[None, :] > qpos[:, None] - sliding_window
+            mask &= kpos[None, :] < Sk  # padding
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m - m_new)
+            l_new = l * scale + p.sum(axis=-1)
+            acc_new = acc * scale[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, v_i, preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        # carry inits derive from qi_q so their vma (shard_map varying-axes
+        # type) matches the scan body outputs under check_vma=True
+        zq = (qi_q[:, :, :, 0] * 0).astype(jnp.float32).transpose(0, 2, 1)
+        m0 = zq + NEG_INF
+        l0 = zq
+        a0 = jnp.zeros((B, H, block_q, Dv), jnp.float32) + zq[..., None]
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.transpose(0, 2, 1, 3)  # (B, block_q, H, D)
+
+    _, outs = jax.lax.scan(q_block, 0, jnp.arange(nq))
+    # outs: (nq, B, block_q, H, D) -> (B, Sq, H, D)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * block_q, H, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention_dense_ref(q, k, v, *, causal=True, sliding_window=0,
+                        q_offset=0, sm_scale=None):
+    """O(S^2)-memory direct attention — oracle for the oracle (tiny shapes)."""
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * sm_scale
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if sliding_window:
+        mask &= kpos[None, :] > qpos[:, None] - sliding_window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)
+
+
+def flash_attention_triangular(q, k, v, *, sliding_window: int = 0,
+                               block_q: int = 512, block_k: int = 512,
+                               sm_scale: Optional[float] = None):
+    """Causal self-attention that SKIPS fully-masked (q, kv) block pairs.
+
+    Perf hillclimb #2: the plain blocked implementation computes all
+    nq x nk rectangles (2x the causal minimum). Here the scan runs over the
+    static list of unmasked (qi, ki<=qi) pairs — nq(nq+1)/2 trips — so the
+    lowered HLO carries half the attention FLOPs/bytes. With a sliding
+    window, pairs outside the band are dropped too. Numerically identical to
+    :func:`flash_attention_ref` (online softmax is order-invariant).
+
+    Requires Sq == Sk (self-attention) and q_offset == 0.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    assert Sq == Sk, "triangular path is for square self-attention"
+    G = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pq, pk = (-Sq) % block_q, (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+    kp = jnp.repeat(kp, G, axis=2)
+    vp = jnp.repeat(vp, G, axis=2)
+    qb = qp.reshape(B, nq, block_q, H, D).transpose(1, 0, 2, 3, 4)
+    kb = kp.reshape(B, nk, block_k, H, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, block_k, H, Dv).transpose(1, 0, 2, 3, 4)
+
+    # static pair list: only blocks intersecting the causal (banded) region
+    pairs = []
+    for qi in range(nq):
+        q_lo, q_hi = qi * block_q, (qi + 1) * block_q - 1
+        for ki in range(nk):
+            k_lo, k_hi = ki * block_k, (ki + 1) * block_k - 1
+            if k_lo > q_hi:
+                continue                       # strictly above the diagonal
+            if sliding_window and k_hi <= q_lo - sliding_window:
+                continue                       # entirely left of the band
+            pairs.append((qi, ki))
+    qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    def step(state, pair):
+        m, l, acc = state                      # (nq, B, H, bq[, Dv])
+        qi, ki = pair
+        q_i = jax.lax.dynamic_index_in_dim(qb, qi, 0, keepdims=False)
+        k_i = jax.lax.dynamic_index_in_dim(kb, ki, 0, keepdims=False)
+        v_i = jax.lax.dynamic_index_in_dim(vb, ki, 0, keepdims=False)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_i,
+                       preferred_element_type=jnp.float32) * sm_scale
+        qpos = qi * block_q + jnp.arange(block_q)
+        kpos = ki * block_k + jnp.arange(block_k)
+        mask = qpos[:, None] >= kpos[None, :]
+        if sliding_window:
+            mask &= kpos[None, :] > qpos[:, None] - sliding_window
+        mask &= kpos[None, :] < Sk
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_old = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_old, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m_old - m_new)
+        l_new = l_old * scale + p.sum(axis=-1)
+        a_new = a_old * scale[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_i, preferred_element_type=jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    # vma-tied zeros (scan carry must match body vma under shard_map)
+    tie = (qb[:, :, 0, 0, 0] * 0).astype(jnp.float32)[:, :, None, None]
+    m0 = jnp.full((nq, B, H, block_q), NEG_INF, jnp.float32) + tie
+    l0 = jnp.zeros((nq, B, H, block_q), jnp.float32) + tie
+    a0 = jnp.zeros((nq, B, H, block_q, Dv), jnp.float32) + tie[..., None]
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (qi_arr, ki_arr))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (nq, B, H, bq, Dv)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, nq * block_q, H, Dv)
+    return out[:, :Sq].astype(q.dtype)

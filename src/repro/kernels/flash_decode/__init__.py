@@ -1,0 +1,4 @@
+from repro.kernels.flash_decode.ops import flash_decode_partial
+from repro.kernels.flash_decode.ref import (combine_partials,
+                                            decode_attention_ref,
+                                            flash_decode_partial_ref)

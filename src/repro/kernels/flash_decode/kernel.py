@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: split-KV flash-decode partials for one-token decode.
+
+Grid: (batch, kv_splits). Each split attends the query (all heads at once —
+the (H, D) tile is MXU-friendly for H >= 8) over its KV-cache slice and
+emits partial (m, l, acc). The partials are P(max)/P(sum) values combined by
+the SBP boxing (pmax/psum) across devices and by
+:func:`repro.kernels.flash_decode.ref.combine_partials` across splits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, m_ref, l_ref, acc_ref, *,
+                   block_k: int, seq_k: int, k_offset: int,
+                   sliding_window: int, sm_scale: float, group: int):
+    si = pl.program_id(1)
+
+    q = q_ref[0].astype(jnp.float32)                  # (H, D)
+    k = k_ref[0].astype(jnp.float32)                  # (block_k, KV, D)
+    v = v_ref[0].astype(jnp.float32)                  # (block_k, KV, Dv)
+    cur = pos_ref[0]
+
+    H = q.shape[0]
+    KV = k.shape[1]
+    # scores per q head against its GQA kv head: (H, block_k)
+    kh = k.transpose(1, 0, 2)                         # (KV, block_k, D)
+    kh = jnp.repeat(kh, group, axis=0)                # (H, block_k, D)
+    s = jax.lax.dot_general(
+        q[:, None, :], kh, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)[:, 0, :] * sm_scale
+
+    kpos = (k_offset + si * block_k
+            + jax.lax.broadcasted_iota(jnp.int32, (H, block_k), 1))
+    mask = (kpos < k_offset + seq_k) & (kpos <= cur)
+    if sliding_window:
+        mask &= kpos > cur - sliding_window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = s.max(axis=1)                                 # (H,)
+    p = jnp.where(jnp.isfinite(m)[:, None], jnp.exp(s - m[:, None]), 0.0)
+    l = p.sum(axis=1)
+    vh = v.transpose(1, 0, 2)
+    vh = jnp.repeat(vh, group, axis=0)                # (H, block_k, Dv)
+    acc = jax.lax.dot_general(
+        p[:, None, :], vh, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)[:, 0, :]
+
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+    acc_ref[0, 0] = acc
+
+
+def flash_decode_pallas(q, k, v, *, cur_pos, k_offset: int = 0,
+                        sliding_window: int = 0, block_k: int = 512,
+                        sm_scale=None, interpret: bool = True):
+    """q: (B, H, D); k, v: (B, L, KV, D/Dv); cur_pos: (B,).
+
+    Returns per-split partials combined over splits: (m, l, acc) with shapes
+    (B, H), (B, H), (B, H, Dv) — identical to
+    :func:`repro.kernels.flash_decode.ref.flash_decode_partial_ref`.
+    """
+    B, H, D = q.shape
+    _, L, KV, Dv = k.shape[0], k.shape[1], k.shape[2], v.shape[3]
+    group = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    block_k = min(block_k, max(8, L))
+    pk = (-L) % block_k
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    ns = kp.shape[1] // block_k
+
+    kernel = functools.partial(
+        _decode_kernel, block_k=block_k, seq_k=L, k_offset=k_offset,
+        sliding_window=sliding_window, sm_scale=sm_scale, group=group)
+
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid=(B, ns),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, KV, D), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, block_k, KV, Dv), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, H), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, 1, H, Dv), lambda b, s: (b, s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, ns, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, ns, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, ns, H, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kp, vp, cur_pos.astype(jnp.int32))
+
+    # combine the split partials (second-level P(max)/P(sum) reduction)
+    m_g = m.max(axis=1)                                        # (B, H)
+    scale = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g[:, None]), 0.0)
+    l_g = (l * scale).sum(axis=1)
+    acc_g = (acc * scale[..., None]).sum(axis=1)
+    return m_g, l_g, acc_g

@@ -1,0 +1,3 @@
+from repro.kernels.softmax_xent.ops import xent_local_stats
+from repro.kernels.softmax_xent.ref import (combine_stats, local_stats_ref,
+                                            softmax_xent_ref)

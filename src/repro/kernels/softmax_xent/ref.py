@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for sharded-vocab softmax cross-entropy (paper Fig 11b).
+
+The unembedding is column-parallel: logits arrive vocab-sharded
+(SBP ``S(vocab)`` on the model axis). The op reduces *locally* first (local
+max, local sum-exp, local label gather) and combines globally with two tiny
+collectives — never materializing gathered logits. The local part is the
+Pallas kernel; the combine is the SBP partial-value reduction.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def local_stats_ref(logits, labels, vocab_offset):
+    """Per-shard stats: (local_max, local_sumexp_given_max, local_label_logit).
+
+    logits: (N, Vl) this shard's vocab slice; labels: (N,) global ids;
+    vocab_offset: scalar — global id of this shard's column 0.
+    Returns m: (N,), s: (N,) = sum exp(logit - m), z: (N,) label logit or 0.
+    """
+    N, Vl = logits.shape
+    lf = logits.astype(jnp.float32)
+    # stop_gradient is exact: d/dm [log sum exp(l - m) + m] == 0
+    m = jax.lax.stop_gradient(lf.max(axis=-1))
+    s = jnp.exp(lf - m[:, None]).sum(axis=-1)
+    local_ids = labels - vocab_offset
+    in_range = (local_ids >= 0) & (local_ids < Vl)
+    safe = jnp.clip(local_ids, 0, Vl - 1)
+    z = jnp.take_along_axis(lf, safe[:, None], axis=1)[:, 0]
+    z = jnp.where(in_range, z, 0.0)
+    return m, s, z
+
+
+def combine_stats(m, s, z, axis_name: Optional[str] = None):
+    """Combine per-shard stats into per-token loss.
+
+    m is P(max); z is P(sum) (exactly one shard contributes); s must be
+    rescaled by exp(m - m_global) before its P(sum) reduction.
+    """
+    if axis_name is not None:
+        m_g = jax.lax.stop_gradient(jax.lax.pmax(m, axis_name))
+        s_g = jax.lax.psum(s * jnp.exp(m - m_g), axis_name)
+        z_g = jax.lax.psum(z, axis_name)
+    else:
+        m_g = m.max(axis=0)
+        s_g = (s * jnp.exp(m - m_g[None])).sum(axis=0)
+        z_g = z.sum(axis=0)
+    return jnp.log(s_g) + m_g - z_g     # -log softmax[label]
+
+
+def softmax_xent_ref(logits, labels):
+    """Unsharded oracle: -log softmax(logits)[label] per row."""
+    lf = logits.astype(jnp.float32)
+    m = lf.max(axis=-1)
+    lse = jnp.log(jnp.exp(lf - m[:, None]).sum(axis=-1)) + m
+    z = jnp.take_along_axis(lf, labels[:, None], axis=1)[:, 0]
+    return lse - z

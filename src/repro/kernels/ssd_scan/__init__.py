@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import (ssd_chunked_ref, ssd_decode_step,
+                                        ssd_sequential_ref)

@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for the Mamba-2 SSD scan (arXiv:2405.21060).
+
+Two implementations:
+
+* :func:`ssd_sequential_ref` — the literal per-step recurrence (the oracle);
+* :func:`ssd_chunked_ref`   — the chunked state-space-duality form: dense
+  MXU-friendly intra-chunk attention-like compute + a short inter-chunk
+  recurrence. This is what the model lowers through (and the shape the Pallas
+  kernel implements).
+
+Shapes (per shard):
+  x : (B, L, H, P)    heads x head_dim
+  dt: (B, L, H)       positive step sizes (post-softplus)
+  A : (H,)            negative decay rates
+  Bm: (B, L, G, N)    input projections (G groups; H % G == 0)
+  Cm: (B, L, G, N)    output projections
+  D : (H,)            skip connection
+Returns y: (B, L, H, P) and the final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(Bm, H):
+    G = Bm.shape[2]
+    assert H % G == 0
+    return jnp.repeat(Bm, H // G, axis=2)
+
+
+def ssd_sequential_ref(x, dt, A, Bm, Cm, D, h0=None):
+    B_, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Bh = _expand_groups(Bm, H).astype(jnp.float32)
+    Ch = _expand_groups(Cm, H).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, None, :])                     # (B, L, H)
+
+    def step(h, inputs):
+        xa, dta, da, ba, ca = inputs
+        # h: (B, H, P, N)
+        h = h * da[:, :, None, None] + (dta[:, :, None] * xa)[..., None] \
+            * ba[:, :, None, :]
+        y = jnp.einsum("bhn,bhpn->bhp", ca, h)
+        return h, y
+
+    if h0 is None:
+        zh = (xf[:, 0, :, :, None] * Bh[:, 0, :, None, :] * 0).astype(jnp.float32)
+        h0 = jnp.zeros((B_, H, P, N), jnp.float32) + zh
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          dA.transpose(1, 0, 2), Bh.transpose(1, 0, 2, 3),
+          Ch.transpose(1, 0, 2, 3))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3) + xf * D[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def _segsum(a):
+    """a: (..., Q) -> (..., Q, Q) lower-triangular cumulative sums:
+    out[i, j] = sum(a[j+1 .. i]) for i >= j, -inf otherwise."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, D, h0=None, chunk: int = 128):
+    """Chunked SSD: O(L Q) memory, dense intra-chunk matmuls."""
+    B_, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, Bm, Cm = zf(x), zf(dt), zf(Bm), zf(Cm)
+    Lp = x.shape[1]
+    nc = Lp // Q
+
+    Bh = _expand_groups(Bm, H).astype(jnp.float32)
+    Ch = _expand_groups(Cm, H).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    # reshape to chunks: (B, nc, Q, ...)
+    xc = xf.reshape(B_, nc, Q, H, P)
+    dtc = dtf.reshape(B_, nc, Q, H)
+    bc = Bh.reshape(B_, nc, Q, H, N)
+    cc = Ch.reshape(B_, nc, Q, H, N)
+    da_log = dtc * A[None, None, None, :]                    # (B, nc, Q, H)
+
+    # intra-chunk ("diagonal block") attention-like term
+    seg = _segsum(da_log.transpose(0, 1, 3, 2))              # (B, nc, H, Q, Q)
+    Lmat = jnp.exp(seg)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc) * Lmat
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", scores, dtc, xc)
+
+    # per-chunk end states: S_c = sum_j decay(Q-1 -> j) dt_j B_j x_j
+    total = da_log.sum(axis=2)                               # (B, nc, H)
+    dec_to_end = jnp.exp(da_log.sum(axis=2, keepdims=True)
+                         - jnp.cumsum(da_log, axis=2))       # (B, nc, Q, H)
+    S = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn",
+                   dec_to_end, dtc, bc, xc)                  # (B, nc, H, P, N)
+
+    # inter-chunk recurrence over nc chunks
+    def chunk_step(h, inputs):
+        s_c, tot_c = inputs
+        h_next = h * jnp.exp(tot_c)[..., None, None] + s_c
+        return h_next, h                                     # emit state BEFORE chunk
+
+    if h0 is None:
+        zh = (xc[:, 0, 0, :, :, None] * bc[:, 0, 0, :, None, :] * 0
+              ).astype(jnp.float32)                  # vma-tied zeros
+        h0 = jnp.zeros((B_, H, P, N), jnp.float32) + zh
+    hT, h_prevs = jax.lax.scan(
+        chunk_step, h0,
+        (S.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    h_prev = h_prevs.transpose(1, 0, 2, 3, 4)                # (B, nc, H, P, N)
+
+    # off-diagonal: contribution of the carried state to every position
+    dec_from_start = jnp.exp(jnp.cumsum(da_log, axis=2))     # (B, nc, Q, H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", cc, h_prev, dec_from_start)
+
+    y = (y_diag + y_off).reshape(B_, Lp, H, P)[:, :L]
+    y = y + xf[:, :L] * D[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, D, h):
+    """Single-token recurrence for serving. x: (B, H, P); dt: (B, H);
+    Bm, Cm: (B, G, N); h: (B, H, P, N) -> (y, h_next)."""
+    H = x.shape[1]
+    Bh = _expand_groups(Bm[:, None], H)[:, 0].astype(jnp.float32)
+    Ch = _expand_groups(Cm[:, None], H)[:, 0].astype(jnp.float32)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, :])
+    h = h * dA[..., None, None] + (dtf[..., None] * xf)[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + xf * D[None, :, None]
+    return y.astype(x.dtype), h

@@ -1,0 +1,473 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+#    512 placeholder host devices back the production meshes below.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination, print memory/cost analysis, and extract the roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all --out results/dryrun
+
+Outputs one JSON per combination with:
+    flops, bytes_accessed (cost_analysis), per-device memory (analytic +
+    memory_analysis when the backend provides it), per-collective wire bytes
+    (parsed from the lowered StableHLO, scan-body trip counts applied), and
+    the three roofline terms per DESIGN/EXPERIMENTS.
+"""
+import argparse
+import json
+import math
+import pathlib
+import re
+import sys
+import time
+
+
+def _build(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = False):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.registry import get_config, get_shape, supports_shape
+    from repro.launch import specs as S
+    from repro.launch.mesh import make_production_mesh
+    from repro.train.steps import (batch_specs, make_serve_step,
+                                   make_train_step, plan_from_mesh)
+    from repro.optim.zero import master_shapes, zero_state_shapes
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not supports_shape(cfg, shape):
+        return None  # documented skip
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan_from_mesh(mesh)
+
+    def shard(tree_structs, tree_specs):
+        return jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            tree_structs, tree_specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    if shape.kind == "train":
+        ts = make_train_step(cfg, mesh, zero=True, fsdp=fsdp)
+        full_s = jax.eval_shape(ts.init_params, jax.random.PRNGKey(0))
+        masters_s = shard(master_shapes(full_s, ts.model_param_specs,
+                                        ts.plan), ts.param_specs)
+        opt_s = shard(zero_state_shapes(full_s, ts.model_param_specs,
+                                        ts.plan), ts.opt_specs)
+        batch_s = shard(S.train_batch_specs(cfg, shape), ts.batch_specs)
+        lowered = ts.step_fn.lower(masters_s, opt_s, batch_s)
+        aux = {"params": masters_s, "opt": opt_s}
+        return lowered, mesh, cfg, shape, aux
+
+    if shape.kind == "prefill":
+        ss = make_serve_step(cfg, mesh, cache_len=shape.seq_len)
+        params_s = jax.eval_shape(
+            lambda k: __import__("repro.models.model_zoo", fromlist=["x"])
+            .build_model(cfg, plan).init(k), jax.random.PRNGKey(0))
+        params_s = shard(params_s, ss.param_specs)
+        batch_s = shard(S.prefill_batch_specs(cfg, shape), ss.batch_specs)
+        lowered = ss.prefill_fn.lower(params_s, batch_s)
+        return lowered, mesh, cfg, shape, {"params": params_s}
+
+    # decode
+    from repro.launch.specs import serve_plan_for
+    from repro.models.model_zoo import build_model, make_decode_caches
+
+    sp = serve_plan_for(cfg, shape)
+    ss = make_serve_step(cfg, mesh, cache_len=sp["cache_len"],
+                         sliding_window=sp["sliding_window"],
+                         ring=sp["ring"], shard_batch=sp["shard_batch"])
+    params_s = jax.eval_shape(
+        lambda k: build_model(cfg, plan).init(k), jax.random.PRNGKey(0))
+    params_s = shard(params_s, ss.param_specs)
+    B = shape.global_batch
+    B_l = B // plan.dp if sp["shard_batch"] else B
+    caches_s = jax.eval_shape(
+        lambda: make_decode_caches(cfg, plan, B_l, sp["cache_len"],
+                                   ring=sp["ring"]))
+    # caches eval_shape gives LOCAL shapes; lift to global per cache spec
+    def lift(sds, spec):
+        shp = list(sds.shape)
+        for dim, entry in enumerate(spec):
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for n in names:
+                if n is None:
+                    continue
+                shp[dim] *= plan.axis_size(n)
+        return jax.ShapeDtypeStruct(
+            tuple(shp), sds.dtype, sharding=NamedSharding(mesh, spec))
+    caches_s = jax.tree.map(lift, caches_s, ss.cache_specs_,
+                            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    tok_s, pos_s = S.decode_io_specs(cfg, shape)
+    dspec = (P(plan.data_axes if len(plan.data_axes) > 1 else plan.data_axes[0])
+             if sp["shard_batch"] else P())
+    tok_s = jax.ShapeDtypeStruct(tok_s.shape, tok_s.dtype,
+                                 sharding=NamedSharding(mesh, dspec))
+    pos_s = jax.ShapeDtypeStruct(pos_s.shape, pos_s.dtype,
+                                 sharding=NamedSharding(mesh, dspec))
+    lowered = ss.decode_fn.lower(params_s, caches_s, tok_s, pos_s)
+    return lowered, mesh, cfg, shape, {"params": params_s, "caches": caches_s}
+
+
+# ---------------------------------------------------------------------------
+# collective parsing (StableHLO text, scan trip counts applied)
+# ---------------------------------------------------------------------------
+
+_TY = re.compile(r"tensor<([0-9x]*?)x?(f32|f64|f16|bf16|i32|i64|i8|ui32|ui8|i1)>")
+_DTSIZE = {"f32": 4, "f64": 8, "f16": 2, "bf16": 2, "i32": 4, "i64": 8,
+           "i8": 1, "ui32": 4, "ui8": 1, "i1": 1}
+
+_COLL = re.compile(
+    r'"?stablehlo\.(all_reduce|all_gather|reduce_scatter|all_to_all|'
+    r'collective_permute|collective_broadcast)"?')
+
+
+def _dims_bytes(dims: str, dt: str):
+    n = 1
+    for d in dims.split("x"):
+        if d:
+            n *= int(d)
+    return n, n * _DTSIZE[dt]
+
+
+def _sig_tensors(ln: str):
+    """Parse the trailing ``: (tensor<..>, ...) -> tensor<..>`` signature."""
+    m = re.search(r":\s*\(([^)]*)\)\s*->\s*(.*)$", ln)
+    if not m:
+        return [], []
+    ins = [_dims_bytes(d, t) for d, t in _TY.findall(m.group(1))]
+    outs = [_dims_bytes(d, t) for d, t in _TY.findall(m.group(2))]
+    return ins, outs
+
+
+class _HloTextParser:
+    """Walk the lowered StableHLO, tracking while-loop trip counts AND the
+    call graph (scan bodies under jax.checkpoint become ``func.call``s),
+    collecting collectives + dot_generals with full multipliers.
+
+    XLA's HloCostAnalysis counts a while body ONCE, so for scanned-layer
+    models both FLOPs and collective bytes must be re-derived from the text
+    with trip counts applied — that is what this parser is for.
+    """
+
+    def __init__(self, text: str):
+        # per-function records: name -> {"dots", "colls", "calls"}
+        self.funcs = {}
+        self._parse(text)
+        self.collectives = []
+        self.dots = []
+        self._resolve("main", 1, frozenset())
+
+    def _resolve(self, fname, mult, stack):
+        f = self.funcs.get(fname)
+        if f is None or fname in stack:
+            return
+        stack = stack | {fname}
+        for d in f["dots"]:
+            self.dots.append({**d, "trip": d["trip"] * mult})
+        for c in f["colls"]:
+            self.collectives.append({**c, "trip": c["trip"] * mult})
+        for callee, trip in f["calls"]:
+            self._resolve(callee, mult * trip, stack)
+
+    def _parse(self, text: str):
+        cur = None
+        const = {}
+        depth_stack = []  # [entry_depth, trip_or_None, armed]
+        brace_depth = 0
+        pending = None
+
+        for ln in text.splitlines():
+            mfn = re.search(r"func\.func\s+(?:\w+\s+)?@([\w.\-]+)\s*\(", ln)
+            if mfn:
+                cur = mfn.group(1)
+                self.funcs[cur] = {"dots": [], "colls": [], "calls": []}
+                const = {}
+                depth_stack = []
+                brace_depth = 0
+                pending = None
+            if cur is None:
+                continue
+            f = self.funcs[cur]
+
+            mconst = re.search(
+                r"(%[\w#]+)\s*=\s*stablehlo\.constant dense<(\d+)>\s*:\s*"
+                r"tensor<i(?:32|64)>", ln)
+            if mconst:
+                const[mconst.group(1)] = int(mconst.group(2))
+
+            if "stablehlo.while" in ln:
+                depth_stack.append([brace_depth, None, False])
+            mcmp = re.search(
+                r"compare\s+LT,\s*%iterArg[\w#]*\s*,\s*([%][\w#]+)", ln)
+            if mcmp and depth_stack and depth_stack[-1][1] is None:
+                depth_stack[-1][1] = const.get(mcmp.group(1), 1)
+
+            trip = 1
+            for _, t, _armed in depth_stack:
+                trip *= (t or 1)
+
+            if pending is not None:
+                ins, outs = _sig_tensors(ln)
+                if ins:
+                    pending["operand_bytes"] = ins[0][1]
+                    pending["out_bytes"] = outs[0][1] if outs else 0
+                    f["colls"].append(pending)
+                    pending = None
+
+            mcall = re.search(r"(?:func\.call|call)\s+@([\w.\-]+)\s*\(", ln)
+            if mcall:
+                f["calls"].append((mcall.group(1), trip))
+
+            mcoll = _COLL.search(ln)
+            if mcoll:
+                g = re.search(r"tensor<(\d+)x(\d+)xi64>", ln)
+                gs = int(g.group(2)) if g else 1
+                rec = {"kind": mcoll.group(1), "group_size": gs, "trip": trip,
+                       "operand_bytes": 0, "out_bytes": 0}
+                ins, outs = _sig_tensors(ln)
+                if ins:     # signature on the same line (all_gather etc.)
+                    rec["operand_bytes"] = ins[0][1]
+                    rec["out_bytes"] = outs[0][1] if outs else 0
+                    f["colls"].append(rec)
+                else:       # region op (all_reduce/reduce_scatter): sig later
+                    pending = rec
+
+            if "stablehlo.dot_general" in ln or "stablehlo.dot " in ln:
+                ins, outs = _sig_tensors(ln)
+                if ins and outs:
+                    lhs_n, lhs_b = ins[0]
+                    out_n, out_b = outs[0]
+                    rhs_b = ins[1][1] if len(ins) > 1 else 0
+                    mctr = re.search(
+                        r"contracting_dims\s*=\s*\[([\d,\s]*)\]", ln)
+                    contract = 1
+                    if mctr and mctr.group(1).strip():
+                        idxs = [int(v) for v in mctr.group(1).split(",")]
+                        msig = re.search(r":\s*\(([^)]*)\)\s*->", ln)
+                        mlhs = _TY.search(msig.group(1)) if msig else None
+                        if mlhs:
+                            lhs_dims = [int(d) for d in
+                                        mlhs.group(1).split("x") if d]
+                            for i in idxs:
+                                contract *= lhs_dims[i]
+                    f["dots"].append({
+                        "flops": 2.0 * out_n * contract,
+                        "bytes": lhs_b + rhs_b + out_b,
+                        "trip": trip})
+
+            if depth_stack and not depth_stack[-1][2] and "{" in ln:
+                depth_stack[-1][2] = True      # region opened
+            brace_depth += ln.count("{") - ln.count("}")
+            while depth_stack and depth_stack[-1][2] \
+                    and brace_depth <= depth_stack[-1][0]:
+                depth_stack.pop()
+
+    @property
+    def dot_flops(self):
+        return sum(d["flops"] * d["trip"] for d in self.dots)
+
+    @property
+    def dot_bytes(self):
+        return sum(d["bytes"] * d["trip"] for d in self.dots)
+
+
+def parse_collectives(text: str):
+    return _HloTextParser(text).collectives
+
+
+def wire_bytes(coll) -> float:
+    """Per-device bytes on the wire for one collective execution."""
+    b, p = coll["operand_bytes"], max(coll["group_size"], 1)
+    k = coll["kind"]
+    if p == 1:
+        return 0.0
+    if k == "all_reduce":
+        return 2 * (p - 1) / p * b
+    if k == "all_gather":
+        return (p - 1) * b          # operand is the local shard
+    if k == "reduce_scatter":
+        return (p - 1) / p * b
+    if k == "all_to_all":
+        return (p - 1) / p * b
+    if k in ("collective_permute", "collective_broadcast"):
+        return b
+    return b
+
+
+def analyze(lowered, mesh, cfg, shape, aux, t_compile_start=None):
+    import jax
+
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:
+        mem = {"error": str(e)}
+
+    # analytic per-device bytes for the inputs (params + opt + caches + batch)
+    def tree_bytes_per_device(tree):
+        total = 0
+        for l in jax.tree.leaves(tree):
+            n = math.prod(l.shape) * l.dtype.itemsize
+            spec = l.sharding.spec
+            denom = 1
+            for entry in spec:
+                names = entry if isinstance(entry, tuple) else (entry,)
+                for nm in names:
+                    if nm is not None:
+                        denom *= dict(zip(mesh.axis_names,
+                                          mesh.devices.shape))[nm]
+            total += n / denom
+        return total
+
+    analytic = {k: tree_bytes_per_device(v) for k, v in aux.items()}
+
+    text = lowered.as_text()
+    parser = _HloTextParser(text)
+    colls = parser.collectives
+    total_wire = sum(wire_bytes(c) * c["trip"] for c in colls)
+    by_kind = {}
+    for c in colls:
+        by_kind.setdefault(c["kind"], 0.0)
+        by_kind[c["kind"]] += wire_bytes(c) * c["trip"]
+
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
+
+    # NOTE: XLA's HloCostAnalysis counts while (scan) bodies ONCE, so for
+    # scanned-layer models the honest per-device numbers come from the text
+    # parse with loop trip counts applied. We record both.
+    flops_total = max(cost.get("flops", 0.0), parser.dot_flops)
+    bytes_total = max(cost.get("bytes accessed", 0.0), parser.dot_bytes)
+    compute_s = flops_total / PEAK_BF16_FLOPS
+    memory_s = bytes_total / HBM_BW
+    coll_s = total_wire / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+
+    n_active = cfg.param_count(active_only=True)
+    n_total = cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+    hlo_flops_all_devices = flops_total * n_dev
+    useful = model_flops / hlo_flops_all_devices if hlo_flops_all_devices else 0.0
+
+    return {
+        "arch": cfg.name, "shape": shape.name, "mesh": list(mesh.devices.shape),
+        "axis_names": list(mesh.axis_names), "n_devices": n_dev,
+        "compile_seconds": compile_s,
+        "cost_analysis": cost,
+        "memory_analysis": mem,
+        "analytic_bytes_per_device": analytic,
+        "collectives": {"total_wire_bytes_per_device": total_wire,
+                        "by_kind": by_kind,
+                        "count": len(colls)},
+        "roofline": {"compute_s": compute_s, "memory_s": memory_s,
+                     "collective_s": coll_s, "dominant": dominant},
+        "model_flops": model_flops,
+        "params_total": n_total, "params_active": n_active,
+        "useful_flops_ratio": useful,
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            verbose: bool = True, fsdp: bool = False):
+    out_path = pathlib.Path(out_dir)
+    out_path.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    if fsdp:
+        tag += "__fsdp"
+    fn = out_path / f"{tag}.json"
+    if fn.exists():
+        print(f"[skip] {tag} (exists)")
+        return json.loads(fn.read_text())
+    t0 = time.time()
+    built = _build(arch, shape_name, multi_pod, fsdp=fsdp)
+    if built is None:
+        rec = {"arch": arch, "shape": shape_name, "skipped": True,
+               "reason": "documented skip (DESIGN.md §Arch-applicability)"}
+        fn.write_text(json.dumps(rec, indent=2))
+        print(f"[SKIP] {tag}")
+        return rec
+    lowered, mesh, cfg, shape, aux = built
+    trace_s = time.time() - t0
+    rec = analyze(lowered, mesh, cfg, shape, aux)
+    rec["trace_seconds"] = trace_s
+    fn.write_text(json.dumps(rec, indent=2))
+    if verbose:
+        r = rec["roofline"]
+        print(f"[ok] {tag}: trace {trace_s:.0f}s compile "
+              f"{rec['compile_seconds']:.0f}s | compute {r['compute_s']*1e3:.2f}ms "
+              f"memory {r['memory_s']*1e3:.2f}ms coll {r['collective_s']*1e3:.2f}ms "
+              f"-> {r['dominant']} | useful {rec['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs.base import INPUT_SHAPES
+    from repro.configs.registry import ARCHITECTURES
+
+    if args.all:
+        combos = [(a, s, mp)
+                  for a in sorted(ARCHITECTURES)
+                  for s in INPUT_SHAPES
+                  for mp in (False, True)]
+    else:
+        combos = [(args.arch, args.shape, args.multi_pod)]
+    failures = []
+    for a, s, mp in combos:
+        try:
+            run_one(a, s, mp, args.out, fsdp=args.fsdp)
+        except Exception as e:
+            failures.append((a, s, mp, repr(e)[:500]))
+            print(f"[FAIL] {a} {s} {'multi' if mp else 'single'}: {e!r}",
+                  file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} failures", file=sys.stderr)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

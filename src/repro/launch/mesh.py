@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state. ``make_production_mesh`` builds the single-pod 16x16
+(data, model) mesh or the 2-pod (pod, data, model) = 512-chip mesh.
+"""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 4):
+    """Small CPU mesh for the distributed test suites."""
+    import jax
+
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis (§Roofline).
+PEAK_BF16_FLOPS = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per chip, one direction)
+HBM_BYTES = 16 * 1024**3        # 16 GiB per chip

@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=0)
+    ap.add_argument("--mesh", default="1x1")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.train.steps import make_serve_step
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    d_, m_ = (int(v) for v in args.mesh.split("x"))
+    mesh = jax.make_mesh((d_, m_), ("data", "model"))
+    cache_len = args.cache_len or (args.prompt_len + args.gen + 8)
+    cache_len = ((cache_len + m_ - 1) // m_) * m_
+
+    ss = make_serve_step(cfg, mesh, cache_len=cache_len)
+    from repro.models.model_zoo import build_model
+    from repro.train.steps import plan_from_mesh
+
+    bundle = build_model(cfg, plan_from_mesh(mesh))
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    batch = {}
+    if cfg.embed_frontend and not cfg.encoder_decoder:
+        batch["embeds"] = jnp.asarray(rng.normal(
+            size=(args.batch, args.prompt_len, cfg.d_model)).astype(np.float32))
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(
+            0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
+    if cfg.encoder_decoder:
+        batch["enc_embeds"] = jnp.asarray(rng.normal(
+            size=(args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32))
+
+    t0 = time.time()
+    h_last, caches = ss.prefill_fn(params, batch)
+    h_last.block_until_ready()
+    print(f"prefill {args.batch}x{args.prompt_len}: {time.time()-t0:.2f}s")
+
+    # greedy decode from the last prefill hidden
+    logits0 = h_last[:, 0] @ params["unembed"]
+    tok = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
+    generated = [np.asarray(tok)]
+    pos = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+    t0 = time.time()
+    for i in range(args.gen):
+        logits, caches = ss.decode_fn(params, caches, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        generated.append(np.asarray(tok))
+        pos = pos + 1
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"decode {args.gen} steps: {dt:.2f}s "
+          f"({args.gen*args.batch/dt:.1f} tok/s)")
+    import numpy as _np
+    gen = _np.stack(generated, axis=1)
+    print("generated ids (first row):", gen[0][:16])
+    assert gen.shape == (args.batch, args.gen + 1)
+    assert (gen >= 0).all() and (gen < cfg.padded_vocab()).all()
+    print("serve ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def _adt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.embed_frontend and not cfg.encoder_decoder:
+        batch = {"embeds": sds((B, S, cfg.d_model), _adt(cfg)),
+                 "labels": sds((B, S), jnp.int32)}
+    else:
+        batch = {"tokens": sds((B, S + 1), jnp.int32)}
+    if cfg.encoder_decoder:
+        batch["enc_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), _adt(cfg))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.embed_frontend and not cfg.encoder_decoder:
+        batch = {"embeds": sds((B, S, cfg.d_model), _adt(cfg))}
+    else:
+        batch = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.encoder_decoder:
+        batch["enc_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), _adt(cfg))
+    return batch
+
+
+def decode_io_specs(cfg: ModelConfig, shape: InputShape) -> Tuple:
+    B = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    return sds((B,), jnp.int32), sds((B,), jnp.int32)   # (tok, pos)
+
+
+def serve_plan_for(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """Cache/window policy per (arch family, input shape) — DESIGN.md §5."""
+    assert shape.kind == "decode"
+    long_ctx = shape.seq_len > 100_000
+    plan = {"cache_len": shape.seq_len, "sliding_window": 0, "ring": False,
+            "shard_batch": shape.global_batch >= 16}
+    if long_ctx:
+        if cfg.use_mla or cfg.family in ("ssm", "hybrid"):
+            # latent cache / recurrent state / 1:7 hybrid: native long context
+            pass
+        else:
+            # dense GQA: sliding-window ring cache (the sub-quadratic variant)
+            plan.update({"cache_len": 8192, "sliding_window": 8192,
+                         "ring": True})
+    return plan

@@ -1,0 +1,163 @@
+"""Mamba-2 (SSD) block, tensor-parallel over SSM heads.
+
+SBP view (model axis):
+  w_x, w_z, w_dt     S(1)  column-parallel (head-structured dims)
+  w_bc               B     replicated (G groups are shared by all heads)
+  conv_x             S(0)  depthwise, channels follow the head split
+  A_log, D, dt_bias  S(0)  per-head
+  out_proj           S(0)  row-parallel -> P(sum), reduced by caller
+
+The gated RMSNorm before out_proj normalizes over *local* channels — i.e.
+GroupNorm with groups == tp (documented TPU adaptation; exact when tp == 1).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_decode_step
+from repro.models.common import MeshPlan, dense_init, rms_norm, split_keys
+
+
+G_GROUPS = 1   # number of B/C groups (mamba2 default: 1)
+
+
+def init_mamba(key, cfg: ModelConfig, plan: MeshPlan) -> Dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    N = cfg.ssm_d_state
+    nh = cfg.ssm_heads
+    dc = cfg.ssm_d_conv
+    ks = split_keys(key, 8)
+    return {
+        "w_x": dense_init(ks[0], (d, di)),
+        "w_z": dense_init(ks[1], (d, di)),
+        "w_bc": dense_init(ks[2], (d, 2 * G_GROUPS * N)),
+        "w_dt": dense_init(ks[3], (d, nh)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_x": dense_init(ks[4], (di, dc), scale=1.0),
+        "conv_bc": dense_init(ks[5], (2 * G_GROUPS * N, dc), scale=1.0),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[6], (di, d)),
+    }
+
+
+def mamba_specs(cfg: ModelConfig, plan: MeshPlan) -> Dict:
+    from jax.sharding import PartitionSpec as P
+
+    mx = plan.spec_model_axis
+    return {
+        "w_x": P(None, mx), "w_z": P(None, mx), "w_bc": P(),
+        "w_dt": P(None, mx), "dt_bias": P(mx), "A_log": P(mx), "D": P(mx),
+        "conv_x": P(mx, None), "conv_bc": P(), "norm_w": P(mx),
+        "out_proj": P(mx, None),
+    }
+
+
+def _causal_conv(x, w, prepend=None):
+    """Depthwise causal conv along seq. x: (B, S, C); w: (C, K)."""
+    B, S, C = x.shape
+    K = w.shape[1]
+    if prepend is None:
+        prepend = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([prepend, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        # xp[:, i : i+S] is x shifted so that tap i sees x[t - (K-1) + i]
+        out = out + xp[:, i:i + S] * w[:, i][None, None, :]
+    return out
+
+
+def mamba_forward(p, x, cfg: ModelConfig, plan: MeshPlan,
+                  return_state: bool = False):
+    """x: (B, S, d) replicated over model -> P(sum) partial output.
+
+    If ``return_state``: also returns (ssm_state, conv_tail) for decoding.
+    """
+    B, S, d = x.shape
+    tp = plan.tp
+    nh_l = cfg.ssm_heads // tp
+    P_hd = cfg.ssm_head_dim
+    N = cfg.ssm_d_state
+    dt_ = x.dtype
+
+    xs = x @ p["w_x"].astype(dt_)                  # (B, S, di_l)
+    z = x @ p["w_z"].astype(dt_)
+    bc = x @ p["w_bc"].astype(dt_)                 # (B, S, 2GN) replicated
+    dt_raw = x @ p["w_dt"].astype(dt_)             # (B, S, nh_l)
+
+    # conv tails kept separately: xs is head-sharded, bc replicated (their
+    # global layouts differ, so one concatenated cache array cannot be SBP'd)
+    conv_tail = (xs[:, -(cfg.ssm_d_conv - 1):], bc[:, -(cfg.ssm_d_conv - 1):])
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"].astype(dt_)))
+    bc = jax.nn.silu(_causal_conv(bc, p["conv_bc"].astype(dt_)))
+
+    Bm = bc[..., :G_GROUPS * N].reshape(B, S, G_GROUPS, N)
+    Cm = bc[..., G_GROUPS * N:].reshape(B, S, G_GROUPS, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(B, S, nh_l, P_hd)
+    y, hT = ssd_chunked_ref(xh, dt, A, Bm, Cm, p["D"].astype(jnp.float32),
+                            chunk=cfg.ssm_chunk)
+    y = y.reshape(B, S, nh_l * P_hd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"].astype(dt_), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)            # P(sum) over model
+    if return_state:
+        return out, (hT.astype(jnp.float32), conv_tail)
+    return out
+
+
+def mamba_decode(p, x, state, cfg: ModelConfig, plan: MeshPlan):
+    """Single-token step. x: (B, 1, d); state: (ssm_state, tail_x, tail_bc)
+    with ssm_state (B, nh_l, P, N), tail_x (B, d_conv-1, di_l),
+    tail_bc (B, d_conv-1, 2GN). Returns (P(sum) partial (B,1,d), new_state)."""
+    B = x.shape[0]
+    tp = plan.tp
+    nh_l = cfg.ssm_heads // tp
+    P_hd = cfg.ssm_head_dim
+    N = cfg.ssm_d_state
+    dt_ = x.dtype
+    h, tail_x, tail_bc = state
+    di_l = nh_l * P_hd
+
+    xs = (x @ p["w_x"].astype(dt_))[:, 0]          # (B, di_l)
+    z = (x @ p["w_z"].astype(dt_))[:, 0]
+    bc = (x @ p["w_bc"].astype(dt_))[:, 0]
+    dt_raw = (x @ p["w_dt"].astype(dt_))[:, 0]
+
+    win_x = jnp.concatenate([tail_x.astype(dt_), xs[:, None]], axis=1)
+    win_bc = jnp.concatenate([tail_bc.astype(dt_), bc[:, None]], axis=1)
+    xs_c = jax.nn.silu(jnp.einsum("bkc,ck->bc", win_x, p["conv_x"].astype(dt_)))
+    bc_c = jax.nn.silu(jnp.einsum("bkc,ck->bc", win_bc,
+                                  p["conv_bc"].astype(dt_)))
+    new_tail_x, new_tail_bc = win_x[:, 1:], win_bc[:, 1:]
+
+    Bm = bc_c[..., :G_GROUPS * N].reshape(B, G_GROUPS, N)
+    Cm = bc_c[..., G_GROUPS * N:].reshape(B, G_GROUPS, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_new = ssd_decode_step(xs_c.reshape(B, nh_l, P_hd), dt, A, Bm, Cm,
+                               p["D"].astype(jnp.float32), h)
+    y = y.reshape(B, di_l)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"].astype(dt_), cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(dt_))[:, None]
+    return out, (h_new, new_tail_x, new_tail_bc)
+
+
+def init_mamba_state(cfg: ModelConfig, plan: MeshPlan, batch: int,
+                     dtype=jnp.bfloat16):
+    nh_l = cfg.ssm_heads // plan.tp
+    di_l = nh_l * cfg.ssm_head_dim
+    h = jnp.zeros((batch, nh_l, cfg.ssm_head_dim, cfg.ssm_d_state), jnp.float32)
+    tail_x = jnp.zeros((batch, cfg.ssm_d_conv - 1, di_l), dtype)
+    tail_bc = jnp.zeros((batch, cfg.ssm_d_conv - 1,
+                         2 * G_GROUPS * cfg.ssm_d_state), dtype)
+    return h, tail_x, tail_bc

@@ -1,0 +1,131 @@
+"""MLP layers: dense SwiGLU (tensor-parallel) and MoE (expert-parallel).
+
+SBP view (model axis):
+  dense:  w_gate/w_up S(1) column-parallel, w_down S(0) row-parallel ->
+          output P(sum), reduced by the caller.
+  moe:    experts S(0) on the *expert* dimension (expert parallelism);
+          each device routes the (replicated) token set to its local experts,
+          processes up to ``capacity`` tokens per expert, scatter-adds back —
+          the combine is P(sum) over the model axis. Shared experts are a
+          dense row-parallel MLP whose partial output is summed into the same
+          P(sum) before a single psum (deferred reduction, paper §3.3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import MeshPlan, dense_init, split_keys, swiglu
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def init_dense_mlp(key, d_model: int, d_ff: int) -> Dict:
+    ks = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff)),
+        "w_up": dense_init(ks[1], (d_model, d_ff)),
+        "w_down": dense_init(ks[2], (d_ff, d_model)),
+    }
+
+
+def dense_mlp_specs(plan: MeshPlan) -> Dict:
+    from jax.sharding import PartitionSpec as P
+
+    mx = plan.spec_model_axis
+    return {"w_gate": P(None, mx), "w_up": P(None, mx), "w_down": P(mx, None)}
+
+
+def dense_mlp_forward(p, x):
+    """x: (..., d) replicated over model -> P(sum) partial output."""
+    g = x @ p["w_gate"].astype(x.dtype)
+    u = x @ p["w_up"].astype(x.dtype)
+    return swiglu(g, u) @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), scale=0.1),
+        "w_gate": dense_init(ks[1], (E, d, ff)),
+        "w_up": dense_init(ks[2], (E, d, ff)),
+        "w_down": dense_init(ks[3], (E, ff, d)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_dense_mlp(ks[4], d,
+                                     cfg.moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def moe_specs(cfg: ModelConfig, plan: MeshPlan) -> Dict:
+    from jax.sharding import PartitionSpec as P
+
+    mx = plan.spec_model_axis
+    p = {"router": P(),
+         "w_gate": P(mx), "w_up": P(mx), "w_down": P(mx)}
+    if cfg.num_shared_experts:
+        p["shared"] = dense_mlp_specs(plan)
+    return p
+
+
+def moe_forward(p, x, cfg: ModelConfig, plan: MeshPlan
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) replicated over model axis.
+
+    Returns (partial_out P(sum) over model, aux_load_balance_loss scalar).
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    tp = plan.tp
+    assert E % tp == 0, (E, tp)
+    E_loc = E // tp
+    T = B * S
+    t = x.reshape(T, d)
+
+    logits = (t @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                            # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)              # (T, K, E)
+    f = onehot.sum(axis=(0, 1)) / (T * K)        # fraction routed per expert
+    pbar = probs.mean(axis=0)
+    aux = E * jnp.sum(f * pbar)
+
+    # local expert affinity matrix (T, E_loc)
+    m_idx = jax.lax.axis_index(plan.model_axis) if tp > 1 else 0
+    lo = m_idx * E_loc
+    local = (idx >= lo) & (idx < lo + E_loc)
+    col = jnp.where(local, idx - lo, 0)
+    A = jnp.zeros((T, E_loc), jnp.float32)
+    A = A.at[jnp.arange(T)[:, None], col].add(
+        jnp.where(local, gates, 0.0).astype(jnp.float32))
+
+    cap = max(1, int(math.ceil(T * K / E * cfg.capacity_factor)))
+    cap = min(cap, T)
+    vals, tok = jax.lax.top_k(A.T, cap)          # (E_loc, cap)
+
+    xe = t[tok]                                  # (E_loc, cap, d)
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", swiglu(g, u), p["w_down"].astype(dt))
+    y = y * vals[..., None].astype(dt)           # gate weight (0 => dropped)
+
+    out = jnp.zeros((T, d), dt).at[tok.reshape(-1)].add(y.reshape(-1, d))
+
+    if cfg.num_shared_experts:
+        out = out + dense_mlp_forward(p["shared"], t)   # both P(sum): defer
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,141 @@
+"""Public model API: build any assigned architecture from its config.
+
+Everything here operates on *local* shards (the functions are called inside
+``shard_map``); batch sizes are per-device. ``launch/`` and ``train/`` wrap
+these in the actual SPMD programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as T
+from repro.models.attention import kv_heads_local
+from repro.models.common import MeshPlan
+from repro.models.mamba import G_GROUPS
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    plan: MeshPlan
+    init: Callable                      # (key) -> params (global shapes)
+    specs: Callable                     # () -> PartitionSpec pytree
+    loss_fn: Callable                   # (params, batch) -> (loss, metrics)
+    prefill: Callable
+    decode_step: Callable
+    init_caches: Callable               # (local_batch, cache_len) -> caches
+
+
+def build_model(cfg: ModelConfig, plan: MeshPlan,
+                sliding_window: int = 0) -> ModelBundle:
+    def init(key):
+        return T.init_model(key, cfg, plan)
+
+    def specs():
+        return T.model_specs(cfg, plan)
+
+    def loss_fn(params, batch):
+        return T.forward_loss(params, batch, cfg, plan)
+
+    def prefill_fn(params, batch, cache_len):
+        return T.prefill(params, batch, cfg, plan, cache_len,
+                         sliding_window=sliding_window)
+
+    def decode_fn(params, caches, tok, pos):
+        return T.decode_step(params, caches, tok, pos, cfg, plan,
+                             sliding_window=sliding_window)
+
+    def init_caches(local_batch, cache_len):
+        return make_decode_caches(cfg, plan, local_batch, cache_len)
+
+    return ModelBundle(cfg, plan, init, specs, loss_fn, prefill_fn,
+                       decode_fn, init_caches)
+
+
+# ---------------------------------------------------------------------------
+# decode cache construction (for dry-running serve_step without a prefill)
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, plan: MeshPlan, kind: str,
+                 local_batch: int, cache_len: int, ring: bool = False) -> Dict:
+    B = local_batch
+    adt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    c: Dict[str, Any] = {}
+    if kind == "attn":
+        if cfg.use_mla:
+            c["c"] = jnp.zeros((B, cache_len, cfg.kv_lora_rank), adt)
+            c["kpe"] = jnp.zeros((B, cache_len, cfg.qk_rope_head_dim), adt)
+        else:
+            L_loc = cache_len // plan.tp
+            c["k"] = jnp.zeros((B, L_loc, cfg.num_kv_heads, cfg.head_dim), adt)
+            c["v"] = jnp.zeros((B, L_loc, cfg.num_kv_heads, cfg.head_dim), adt)
+            if ring:   # sliding-window ring buffer: per-slot position table
+                c["pos"] = jnp.full((B, L_loc), -1, jnp.int32)
+    else:
+        nh_l = cfg.ssm_heads // plan.tp
+        di_l = nh_l * cfg.ssm_head_dim
+        c["h"] = jnp.zeros((B, nh_l, cfg.ssm_head_dim, cfg.ssm_d_state),
+                           jnp.float32)
+        c["tail_x"] = jnp.zeros((B, cfg.ssm_d_conv - 1, di_l), adt)
+        c["tail_bc"] = jnp.zeros(
+            (B, cfg.ssm_d_conv - 1, 2 * G_GROUPS * cfg.ssm_d_state), adt)
+    if cfg.encoder_decoder:
+        n_kv = kv_heads_local(cfg, plan)
+        c["xk"] = jnp.zeros((B, cfg.encoder_seq, n_kv, cfg.head_dim), adt)
+        c["xv"] = jnp.zeros((B, cfg.encoder_seq, n_kv, cfg.head_dim), adt)
+    return c
+
+
+def make_decode_caches(cfg: ModelConfig, plan: MeshPlan, local_batch: int,
+                       cache_len: int, ring: bool = False) -> Dict:
+    lay = T.stack_layout(cfg)
+    pro = [_block_cache(cfg, plan, k, local_batch, cache_len, ring)
+           for (k, _) in lay.prologue]
+    body = []
+    for (kind, _) in lay.period_slots:
+        one = _block_cache(cfg, plan, kind, local_batch, cache_len, ring)
+        body.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (lay.n_periods,) + x.shape),
+            one))
+    return {"prologue": pro, "body": body}
+
+
+def cache_specs(cfg: ModelConfig, plan: MeshPlan, batch_axes: Tuple[str, ...],
+                ring: bool = False):
+    """PartitionSpecs for decode caches: batch over data axes; GQA k/v are
+    ALSO sequence-sharded over the model axis (dim 1 locally = seq chunk)."""
+    from jax.sharding import PartitionSpec as P
+
+    lay = T.stack_layout(cfg)
+    ba = tuple(batch_axes)
+    mx = plan.spec_model_axis
+
+    def blk(kind: str, stacked: bool):
+        lead = (None,) if stacked else ()
+        c = {}
+        if kind == "attn":
+            if cfg.use_mla:
+                c["c"] = P(*lead, ba)          # latent replicated over model
+                c["kpe"] = P(*lead, ba)
+            else:
+                c["k"] = P(*lead, ba, mx)      # seq-sharded cache
+                c["v"] = P(*lead, ba, mx)
+                if ring:
+                    c["pos"] = P(*lead, ba, mx)
+        else:
+            c["h"] = P(*lead, ba, mx)          # heads sharded
+            c["tail_x"] = P(*lead, ba, None, mx)
+            c["tail_bc"] = P(*lead, ba)        # replicated bc channels
+        if cfg.encoder_decoder:
+            c["xk"] = P(*lead, ba, None, mx)   # cross kv: heads sharded
+            c["xv"] = P(*lead, ba, None, mx)
+        return c
+
+    pro = [blk(k, False) for (k, _) in lay.prologue]
+    body = [blk(k, True) for (k, _) in lay.period_slots]
+    return {"prologue": pro, "body": body}

@@ -1,0 +1,5 @@
+from repro.runtime.actor import Actor, ActorSpec, build_actors
+from repro.runtime.messages import Ack, Req, make_actor_id, parse_actor_id
+from repro.runtime.pipeline import analyze, pipeline_specs, plan_registers
+from repro.runtime.scheduler import CommModel, SimResult, Simulator, simulate
+from repro.runtime.threaded import ThreadedRuntime

@@ -1,0 +1,152 @@
+"""The actor protocol (paper §4): registers, counters, req/ack state machine.
+
+This module is *driver-agnostic*: the same :class:`Actor` logic is advanced by
+the discrete-event simulator (:mod:`repro.runtime.scheduler`) and by the real
+threaded runtime (:mod:`repro.runtime.threaded`). Drivers deliver messages and
+ask ``actor.try_fire()``; the actor owns all counter bookkeeping:
+
+* ``in counter``   — per input channel: tensors ready to consume.
+* ``out counter``  — free out-register quota (pre-allocated memory budget).
+* ``reference counter`` — per out-register instance: active consumers.
+
+An action fires only when every in counter is non-zero AND the out counter is
+non-zero — resource availability is an explicit dependency (paper §4.2),
+which is what prevents the Fig. 2 OOM/deadlock and gives back-pressure/
+pipelining for free (§4.3).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime.messages import Ack, Req, make_actor_id
+
+
+@dataclasses.dataclass
+class ActorSpec:
+    """Static description of one actor (one physical op)."""
+
+    name: str
+    fn: Callable[..., Any]                  # action body (real or dummy)
+    inputs: Tuple[str, ...] = ()            # producer actor names
+    out_regs: int = 2                       # out-register quota (memory budget)
+    node: int = 0
+    thread: int = 0
+    queue: int = 0
+    duration: Any = 1.0                     # sim-mode cost (float or fn(version))
+    max_fires: Optional[int] = None         # e.g. #batches for source actors
+    out_nbytes: int = 0                     # for comm cost in sim mode
+
+
+_reg_counter = itertools.count(1)
+
+
+class Actor:
+    """Protocol state machine for one actor."""
+
+    def __init__(self, spec: ActorSpec, actor_id: int,
+                 consumers: Sequence[Tuple[int, str]]):
+        self.spec = spec
+        self.actor_id = actor_id
+        # consumers: list of (consumer_actor_id, channel_name)
+        self.consumers = list(consumers)
+        # in-register state: channel -> FIFO of Req (holding payload refs)
+        self.in_queues: Dict[str, collections.deque] = {
+            ch: collections.deque() for ch in spec.inputs}
+        # out-register state
+        self.out_counter = spec.out_regs
+        self.refcount: Dict[int, int] = {}          # reg instance -> refs
+        self.reg_payload: Dict[int, Any] = {}
+        self.fired = 0
+        self.version = 0
+        # instrumentation
+        self.peak_regs_in_use = 0
+        self.history: List[Tuple[float, float]] = []   # (start, end) of actions
+
+    # -- message handling -------------------------------------------------------
+    def on_req(self, msg: Req) -> None:
+        self.in_queues[msg.channel].append(msg)
+
+    def on_ack(self, msg: Ack) -> None:
+        self.refcount[msg.reg_id] -= 1
+        if self.refcount[msg.reg_id] == 0:
+            # register recycled: memory quota returns (paper: out counter += 1)
+            del self.refcount[msg.reg_id]
+            del self.reg_payload[msg.reg_id]
+            self.out_counter += 1
+
+    # -- firing -------------------------------------------------------------------
+    @property
+    def exhausted(self) -> bool:
+        return self.spec.max_fires is not None and self.fired >= self.spec.max_fires
+
+    def ready(self) -> bool:
+        if self.exhausted or self.out_counter <= 0:
+            return False
+        return all(q for q in self.in_queues.values())
+
+    def fire(self) -> Tuple[Any, List[Ack], int]:
+        """Execute the action. Returns (output_payload, acks_to_send, reg_id).
+
+        The driver is responsible for sending the returned acks and the reqs
+        built by :meth:`emit_reqs`, and for timing/thread serialization.
+        """
+        assert self.ready()
+        ins = []
+        acks = []
+        for ch in self.spec.inputs:
+            req = self.in_queues[ch].popleft()
+            ins.append(req.payload)
+            acks.append(Ack(src=self.actor_id, dst=req.src,
+                            reg_id=req.reg_id, version=req.version))
+        out = self.spec.fn(*ins)
+        # allocate an out register instance
+        self.out_counter -= 1
+        reg_id = next(_reg_counter)
+        nrefs = len(self.consumers)
+        if nrefs == 0:
+            # no consumer: recycle immediately
+            self.out_counter += 1
+        else:
+            self.refcount[reg_id] = nrefs
+            self.reg_payload[reg_id] = out
+        in_use = self.spec.out_regs - self.out_counter
+        self.peak_regs_in_use = max(self.peak_regs_in_use, in_use)
+        self.fired += 1
+        v = self.version
+        self.version += 1
+        return out, acks, reg_id if nrefs else -1
+
+    def emit_reqs(self, out: Any, reg_id: int, version: int) -> List[Req]:
+        return [Req(src=self.actor_id, dst=cid, reg_id=reg_id, channel=ch,
+                    payload=out, version=version, nbytes=self.spec.out_nbytes)
+                for cid, ch in self.consumers]
+
+
+def build_actors(specs: Sequence[ActorSpec]):
+    """Wire a graph of ActorSpecs into Actor instances with assigned IDs.
+
+    Returns (actors_by_name, actors_by_id).
+    """
+    per_key_index: Dict[Tuple[int, int, int], int] = collections.defaultdict(int)
+    ids: Dict[str, int] = {}
+    for s in specs:
+        key = (s.node, s.thread, s.queue)
+        idx = per_key_index[key]
+        per_key_index[key] += 1
+        ids[s.name] = make_actor_id(s.node, s.thread, s.queue, idx)
+    # consumer lists: actor A consumes channel named after producer
+    consumers: Dict[str, List[Tuple[int, str]]] = collections.defaultdict(list)
+    for s in specs:
+        for producer_name in s.inputs:
+            if producer_name not in ids:
+                raise ValueError(f"{s.name} consumes unknown actor {producer_name}")
+            consumers[producer_name].append((ids[s.name], producer_name))
+    by_name, by_id = {}, {}
+    for s in specs:
+        a = Actor(s, ids[s.name], consumers.get(s.name, ()))
+        by_name[s.name] = a
+        by_id[a.actor_id] = a
+    return by_name, by_id

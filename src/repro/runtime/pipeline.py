@@ -1,0 +1,108 @@
+"""Pipeline-parallel schedules from register quotas (paper §4.3, §6.5).
+
+The paper's key observation: a synchronous pipeline schedule is not a special
+scheduler — it *emerges* from out-register quotas. A stage's forward actor
+output register is referenced by BOTH the next stage's forward AND this
+stage's backward (the stashed activation); it is recycled only when both have
+acked. Capping the quota at ``R`` bounds in-flight microbatches to ``R``:
+
+* ``R = num_microbatches``  -> GPipe-style all-forward-then-backward memory;
+* ``R = num_stages - stage``-> 1F1B steady state (Megatron's schedule);
+* ``R = 1``                 -> fully serialized (no pipelining).
+
+:func:`pipeline_specs` builds the actor graph; :func:`plan_registers` is the
+compile-time resource planner: it simulates quotas and picks the smallest one
+within ``tolerance`` of the best makespan — this is the "resource planning at
+compile time" the paper argues for (§2.3), done with the actor model itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime.actor import ActorSpec
+from repro.runtime.scheduler import CommModel, SimResult, simulate
+
+
+def pipeline_specs(num_stages: int, num_microbatches: int,
+                   fwd_time: float = 1.0, bwd_time: float = 2.0,
+                   regs: Optional[Sequence[int]] = None,
+                   act_nbytes: int = 1 << 20) -> List[ActorSpec]:
+    """Actor graph for a synchronous fwd/bwd pipeline over ``num_stages``
+    devices. ``regs[s]`` is stage s's activation register quota."""
+    if regs is None:
+        regs = [num_stages - s for s in range(num_stages)]  # 1F1B default
+    specs: List[ActorSpec] = []
+    specs.append(ActorSpec(
+        name="data", fn=lambda *a: 0, inputs=(), out_regs=2,
+        node=0, thread=0, duration=fwd_time * 0.1,
+        max_fires=num_microbatches, out_nbytes=act_nbytes))
+    for s in range(num_stages):
+        fwd_in = "data" if s == 0 else f"f{s-1}"
+        # forward actor on device/thread s
+        specs.append(ActorSpec(
+            name=f"f{s}", fn=lambda *a: 0, inputs=(fwd_in,),
+            out_regs=max(1, regs[s]), node=0, thread=s + 1,
+            duration=fwd_time, max_fires=num_microbatches,
+            out_nbytes=act_nbytes))
+    for s in reversed(range(num_stages)):
+        # backward actor: consumes stashed activation f{s} and upstream grad
+        ins = (f"f{s}",) if s == num_stages - 1 else (f"f{s}", f"b{s+1}")
+        specs.append(ActorSpec(
+            name=f"b{s}", fn=lambda *a: 0, inputs=ins,
+            out_regs=2, node=0, thread=s + 1,
+            duration=bwd_time, max_fires=num_microbatches,
+            out_nbytes=act_nbytes))
+    # optimizer actor per stage consuming the gradient stream
+    for s in range(num_stages):
+        specs.append(ActorSpec(
+            name=f"opt{s}", fn=lambda *a: 0, inputs=(f"b{s}",),
+            out_regs=1, node=0, thread=s + 1, duration=0.01,
+            max_fires=num_microbatches))
+    return specs
+
+
+@dataclasses.dataclass
+class PipelinePlan:
+    regs: List[int]
+    makespan: float
+    peak_activation_regs: Dict[str, int]
+    bubble_fraction: float
+
+
+def analyze(num_stages: int, num_microbatches: int, regs: Sequence[int],
+            fwd_time: float = 1.0, bwd_time: float = 2.0) -> PipelinePlan:
+    specs = pipeline_specs(num_stages, num_microbatches, fwd_time, bwd_time,
+                           list(regs))
+    res = simulate(specs, comm=CommModel(same_node=0.0, cross_node_latency=0.0))
+    if res.deadlocked:
+        raise RuntimeError(f"pipeline deadlocked with regs={list(regs)}")
+    ideal = num_microbatches * (fwd_time + bwd_time)
+    bubble = 1.0 - ideal / res.makespan if res.makespan > 0 else 0.0
+    return PipelinePlan(
+        regs=list(regs), makespan=res.makespan,
+        peak_activation_regs={f"f{s}": res.peak_regs[f"f{s}"]
+                              for s in range(num_stages)},
+        bubble_fraction=max(0.0, bubble))
+
+
+def plan_registers(num_stages: int, num_microbatches: int,
+                   fwd_time: float = 1.0, bwd_time: float = 2.0,
+                   tolerance: float = 0.02) -> PipelinePlan:
+    """Compile-time resource planning: smallest uniform quota whose makespan
+    is within ``tolerance`` of the best observed — memory saved for free."""
+    best: Optional[PipelinePlan] = None
+    plans = []
+    for r in range(1, num_microbatches + 1):
+        p = analyze(num_stages, num_microbatches, [r] * num_stages,
+                    fwd_time, bwd_time)
+        plans.append(p)
+        if best is None or p.makespan < best.makespan:
+            best = p
+        if r >= num_stages and p.makespan <= best.makespan * (1 + 1e-9):
+            break  # saturated: more registers cannot help
+    target = best.makespan * (1 + tolerance)
+    for p in plans:
+        if p.makespan <= target:
+            return p
+    return best

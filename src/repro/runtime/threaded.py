@@ -1,0 +1,113 @@
+"""Real threaded actor runtime — actors on OS threads with FIFO mailboxes.
+
+This is the paper's Fig 7 implementation for the *host side* of the JAX
+program: data loading, preprocessing, host-to-device staging and step issue
+run as actors on dedicated OS threads (one per "hardware queue"), with the
+same req/ack + register-quota protocol as the simulator. Because the quota is
+enforced, a fast producer (data loader) is back-pressured instead of buffering
+unboundedly (§4.3) — this is what `repro.data.pipeline` builds on.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime.actor import Actor, ActorSpec, build_actors
+from repro.runtime.messages import Ack, Req, thread_of, node_of
+
+
+class ThreadedRuntime:
+    def __init__(self, specs: Sequence[ActorSpec],
+                 collect_outputs_of: Optional[str] = None):
+        self.by_name, self.by_id = build_actors(specs)
+        self.collect = collect_outputs_of
+        self.outputs: List[Any] = []
+        self._outputs_lock = threading.Lock()
+        # one mailbox + worker per (node, thread)
+        keys = sorted({(s.node, s.thread) for s in (a.spec for a in self.by_name.values())})
+        self.mailboxes: Dict[Tuple[int, int], queue.Queue] = {
+            k: queue.Queue() for k in keys}
+        self.actors_on: Dict[Tuple[int, int], List[Actor]] = collections.defaultdict(list)
+        for a in self.by_name.values():
+            self.actors_on[(a.spec.node, a.spec.thread)].append(a)
+        self._done = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._errors: List[BaseException] = []
+
+    def _key_of(self, actor_id: int) -> Tuple[int, int]:
+        return (node_of(actor_id), thread_of(actor_id))
+
+    def _post(self, msg) -> None:
+        self.mailboxes[self._key_of(msg.dst)].put(msg)
+
+    def _fire_ready(self, key) -> None:
+        progressed = True
+        while progressed and not self._done.is_set():
+            progressed = False
+            for actor in self.actors_on[key]:
+                while actor.ready():
+                    out, acks, reg_id = actor.fire()
+                    version = actor.version - 1
+                    if self.collect == actor.spec.name:
+                        with self._outputs_lock:
+                            self.outputs.append(out)
+                    for ack in acks:
+                        self._post(ack)
+                    if reg_id != -1:
+                        for req in actor.emit_reqs(out, reg_id, version):
+                            self._post(req)
+                    progressed = True
+
+    def _worker(self, key) -> None:
+        box = self.mailboxes[key]
+        try:
+            self._fire_ready(key)
+            while not self._done.is_set():
+                try:
+                    msg = box.get(timeout=0.05)
+                except queue.Empty:
+                    continue
+                if msg is None:
+                    return
+                actor = self.by_id[msg.dst]
+                if isinstance(msg, Req):
+                    actor.on_req(msg)
+                else:
+                    actor.on_ack(msg)
+                self._fire_ready(key)
+        except BaseException as e:  # surface worker crashes to the caller
+            self._errors.append(e)
+            self._done.set()
+
+    def run(self, timeout: float = 120.0) -> List[Any]:
+        """Run until every bounded actor has exhausted its fires."""
+        bounded = [a for a in self.by_name.values() if a.spec.max_fires is not None]
+        if not bounded:
+            raise ValueError("threaded runtime needs at least one bounded actor")
+        for key in self.mailboxes:
+            t = threading.Thread(target=self._worker, args=(key,), daemon=True)
+            t.start()
+            self._threads.append(t)
+        import time
+
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            if self._errors:
+                break
+            if all(a.exhausted for a in bounded) and all(
+                    not a.refcount for a in self.by_name.values()):
+                break
+            time.sleep(0.002)
+        self._done.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+        if self._errors:
+            raise self._errors[0]
+        if not all(a.exhausted for a in bounded):
+            raise TimeoutError(
+                "threaded actor runtime did not complete: "
+                + ", ".join(f"{a.spec.name}={a.fired}/{a.spec.max_fires}"
+                            for a in bounded if not a.exhausted))
+        return self.outputs

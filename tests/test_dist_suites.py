@@ -1,0 +1,33 @@
+"""Run the multi-device numerics suites in subprocesses.
+
+The main pytest process keeps the default single CPU device (per the repo
+policy: only launch/dryrun.py forces a placeholder device count). Anything
+needing >1 device runs here as a grouped subprocess suite with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HERE = pathlib.Path(__file__).parent
+SRC = str(HERE.parent / "src")
+
+SUITES = sorted(p.name for p in (HERE / "dist").glob("suite_*.py"))
+
+
+@pytest.mark.parametrize("suite", SUITES)
+def test_dist_suite(suite):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # the suite sets its own device count
+    proc = subprocess.run(
+        [sys.executable, str(HERE / "dist" / suite)],
+        env=env, capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"suite {suite} failed\n--- stdout ---\n{proc.stdout[-4000:]}"
+            f"\n--- stderr ---\n{proc.stderr[-4000:]}")
+    assert f"ALL-OK" in proc.stdout

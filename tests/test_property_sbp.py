@@ -1,0 +1,96 @@
+"""Hypothesis property tests on SBP invariants (pure logic, no devices)."""
+import math
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.boxing import nd_transition_cost, transition_cost
+from repro.core.placement import Placement
+from repro.core.sbp import B, Broadcast, NdSbp, Partial, Sbp, Split, ndsbp
+
+COMPONENTS = [Split(0), Split(1), Broadcast(), Partial("sum")]
+comp_st = st.sampled_from(COMPONENTS)
+mesh_st = st.sampled_from([(2,), (4,), (2, 2), (2, 4), (4, 4), (2, 2, 2)])
+
+
+@st.composite
+def ndsbp_mesh(draw):
+    mesh = draw(mesh_st)
+    comps = tuple(draw(comp_st) for _ in mesh)
+    return NdSbp(comps), mesh
+
+
+@given(ndsbp_mesh())
+def test_local_shape_conserves_elements(sm):
+    """sum of shard elements x replicas == logical elements (for S/B axes)."""
+    sig, mesh = sm
+    shape = (16, 32)
+    sig.validate_for_shape(shape, mesh)
+    local = sig.local_shape(shape, mesh)
+    n_dev = math.prod(mesh)
+    shard_elems = math.prod(local)
+    # every device holds shard_elems; splits tile the tensor, B and P replicate
+    copies = 1
+    for comp, size in zip(sig, mesh):
+        if not comp.is_split:
+            copies *= size
+    assert shard_elems * n_dev == math.prod(shape) * copies
+
+
+@given(ndsbp_mesh())
+def test_transition_cost_non_negative_and_zero_iff_free(sm):
+    sig, mesh = sm
+    T = 4096.0
+    for dst_comp in COMPONENTS:
+        for k in range(len(mesh)):
+            c = transition_cost(sig[k], dst_comp, T, mesh[k])
+            assert c.volume >= 0
+            if sig[k] == dst_comp:
+                assert c.volume == 0
+
+
+@given(ndsbp_mesh(), st.integers(0, 3))
+def test_nd_cost_identity(sm, _):
+    sig, mesh = sm
+    assert nd_transition_cost(sig, sig, 8192.0, mesh) == 0.0
+
+
+@given(ndsbp_mesh())
+def test_nd_cost_monotone_in_bytes(sm):
+    """cost scales linearly with tensor size."""
+    sig, mesh = sm
+    dst = NdSbp.broadcast(len(mesh))
+    c1 = nd_transition_cost(sig, dst, 1000.0, mesh)
+    c2 = nd_transition_cost(sig, dst, 2000.0, mesh)
+    assert abs(c2 - 2 * c1) < 1e-6
+
+
+@settings(deadline=None)  # first call imports jax.sharding lazily
+@given(ndsbp_mesh())
+def test_partition_spec_roundtrip(sm):
+    """SBP -> PartitionSpec keeps sharded-axis structure (P excluded)."""
+    sig, mesh = sm
+    if sig.has_partial:
+        return
+    names = ("a", "b", "c")[: len(mesh)]
+    pl = Placement(names, mesh)
+    spec = pl.partition_spec(sig)
+    # every split axis appears in the spec
+    for comp, name in zip(sig, names):
+        if comp.is_split:
+            flat = []
+            for e in spec:
+                if isinstance(e, tuple):
+                    flat.extend(e)
+                elif e is not None:
+                    flat.append(e)
+            assert name in flat
+
+
+@given(st.integers(2, 16), st.integers(1, 1 << 20))
+def test_allreduce_equals_gather_plus_scatter(p, nbytes):
+    """Table 2 consistency: all_reduce cost == reduce_scatter + all_gather."""
+    ar = transition_cost(Partial("sum"), Broadcast(), float(nbytes), p).volume
+    rs = transition_cost(Partial("sum"), Split(0), float(nbytes), p).volume
+    ag = transition_cost(Split(0), Broadcast(), float(nbytes), p).volume
+    assert abs(ar - (rs + ag)) < 1e-9

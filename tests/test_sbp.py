@@ -1,0 +1,154 @@
+"""Unit tests for SBP types, deduction rules and the Table-2 cost model.
+
+Pure logic — no jax devices required.
+"""
+import math
+
+import pytest
+
+from repro.core import ops as ops_mod
+from repro.core.boxing import nd_transition_cost, transition_cost
+from repro.core.placement import Placement
+from repro.core.sbp import B, Broadcast, NdSbp, P, Partial, S, Sbp, Split, ndsbp
+
+
+class TestSbpTypes:
+    def test_parse_components(self):
+        assert Sbp.parse("S(0)") == Split(0)
+        assert Sbp.parse("S(3)") == Split(3)
+        assert Sbp.parse("B") == Broadcast()
+        assert Sbp.parse("P") == Partial("sum")
+        assert Sbp.parse("P(max)") == Partial("max")
+
+    def test_parse_nd(self):
+        nd = ndsbp("S(0), B")
+        assert nd.components == (Split(0), Broadcast())
+        nd = ndsbp("(S(0), S(1), P(sum))")
+        assert nd.components == (Split(0), Split(1), Partial("sum"))
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            Sbp.parse("Q(1)")
+        with pytest.raises(ValueError):
+            Partial("mean")
+        with pytest.raises(ValueError):
+            Split(-1)
+
+    def test_local_shape(self):
+        nd = ndsbp("S(0), S(1)")
+        assert nd.local_shape((8, 16), (2, 4)) == (4, 4)
+        nd = ndsbp("S(0), S(0)")          # two axes split the same dim
+        assert nd.local_shape((8, 16), (2, 4)) == (1, 16)
+        nd = ndsbp("B, P")
+        assert nd.local_shape((8, 16), (2, 4)) == (8, 16)
+
+    def test_validate_rejects_uneven(self):
+        with pytest.raises(ValueError):
+            ndsbp("S(0), B").validate_for_shape((7, 3), (2, 4))
+        with pytest.raises(ValueError):
+            ndsbp("S(2), B").validate_for_shape((8, 8), (2, 4))
+
+    def test_num_replicas(self):
+        assert ndsbp("B, B").num_replicas((2, 4)) == 8
+        assert ndsbp("S(0), B").num_replicas((2, 4)) == 4
+        assert ndsbp("S(0), S(1)").num_replicas((2, 4)) == 1
+
+
+class TestTable2Cost:
+    """Table 2 of the paper, entry by entry (same-device column)."""
+
+    T = 1024.0
+    p = 4
+
+    def c(self, a, b, disjoint=False, p2=None):
+        return transition_cost(Sbp.parse(a), Sbp.parse(b), self.T, self.p,
+                               p2=p2, disjoint=disjoint)
+
+    def test_same_set(self):
+        assert self.c("S(0)", "S(0)").volume == 0
+        r = self.c("S(0)", "S(1)")
+        assert r.volume == (self.p - 1) / self.p * self.T
+        assert r.primitive == "all_to_all"
+        r = self.c("S(0)", "B")
+        assert r.volume == (self.p - 1) * self.T and r.primitive == "all_gather"
+        assert self.c("S(0)", "P").volume == 0
+        assert self.c("B", "S(1)").volume == 0
+        assert self.c("B", "B").volume == 0
+        assert self.c("B", "P").volume == 0
+        r = self.c("P", "S(0)")
+        assert r.volume == (self.p - 1) * self.T and r.primitive == "reduce_scatter"
+        r = self.c("P", "B")
+        assert r.volume == 2 * (self.p - 1) * self.T and r.primitive == "all_reduce"
+        assert self.c("P", "P").volume == 0
+
+    def test_disjoint_set(self):
+        p2 = 8
+        assert self.c("S(0)", "S(0)", True, p2).volume == self.T
+        assert self.c("S(0)", "S(1)", True, p2).volume == self.T
+        assert self.c("S(0)", "B", True, p2).volume == p2 * self.T
+        assert self.c("S(0)", "P", True, p2).volume == self.T
+        assert self.c("B", "S(0)", True, p2).volume == self.T
+        assert self.c("B", "B", True, p2).volume == p2 * self.T
+        assert self.c("B", "P", True, p2).volume == self.T
+        assert self.c("P", "S(0)", True, p2).volume == self.p * self.T
+        assert self.c("P", "B", True, p2).volume == (self.p + p2 - 1) * self.T
+        assert self.c("P", "P", True, p2).volume == self.p * self.T
+
+    def test_nd_cost_identity_free(self):
+        assert nd_transition_cost(ndsbp("S(0),B"), ndsbp("S(0),B"), self.T,
+                                  (2, 4)) == 0
+
+    def test_nd_cost_single_axis(self):
+        # only the model axis changes: S->B all_gather over groups of 4,
+        # tensor already split in half on data axis -> per-group T/2
+        got = nd_transition_cost(ndsbp("S(0),S(1)"), ndsbp("S(0),B"),
+                                 self.T, (2, 4))
+        assert got == (4 - 1) * self.T / 2
+
+
+class TestDeduction:
+    def test_matmul_table1(self):
+        """Table 1, all six rows, via the op registry."""
+        spec = ops_mod.OpSpec(ops_mod.get("matmul"))
+        rows = {(repr(r.ins[0]), repr(r.ins[1])): repr(r.out)
+                for r in spec.rules()}
+        assert rows[("S(0)", "B")] == "S(0)"
+        assert rows[("B", "S(1)")] == "S(1)"
+        assert rows[("S(1)", "S(0)")] == "P(sum)"
+        assert rows[("P(sum)", "B")] == "P(sum)"
+        assert rows[("B", "P(sum)")] == "P(sum)"
+        assert rows[("B", "B")] == "B"
+
+    def test_matmul_table3_2d(self):
+        """Table 3: 2-D signatures arise as per-axis products of Table 1."""
+        spec = ops_mod.OpSpec(ops_mod.get("matmul"))
+        sigs = {(repr(i[0]), repr(i[1])): repr(o)
+                for i, o, _ in spec.nd_signatures(2)}
+        assert sigs[("(S(0), B)", "(B, S(1))")] == "(S(0), S(1))"
+        assert sigs[("(S(0), S(1))", "(B, S(0))")] == "(S(0), P(sum))"
+
+    def test_bias_add_excludes_partial(self):
+        spec = ops_mod.OpSpec(ops_mod.get("bias_add"))
+        for r in spec.rules():
+            assert not r.ins[0].is_partial, "P+B bias would double-apply bias"
+
+    def test_partial_through_linear_only(self):
+        lin = ops_mod.OpSpec(ops_mod.get("ew_unary"), {"ndim": 2, "linear": True})
+        non = ops_mod.OpSpec(ops_mod.get("ew_unary"), {"ndim": 2, "linear": False})
+        assert any(r.ins[0].is_partial for r in lin.rules())
+        assert not any(r.ins[0].is_partial for r in non.rules())
+
+
+class TestPlacement:
+    def test_partition_spec(self):
+        from jax.sharding import PartitionSpec
+
+        pl = Placement(("data", "model"), (2, 4))
+        assert pl.partition_spec(ndsbp("S(0),B")) == PartitionSpec("data")
+        assert pl.partition_spec(ndsbp("S(1),S(0)")) == PartitionSpec(
+            "model", "data")
+        assert pl.partition_spec(ndsbp("S(0),S(0)")) == PartitionSpec(
+            ("data", "model"))
+        assert pl.partition_spec(ndsbp("B,B")) == PartitionSpec()
+        with pytest.raises(ValueError):
+            pl.partition_spec(ndsbp("P,B"))

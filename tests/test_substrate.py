@@ -1,0 +1,141 @@
+"""Substrate tests: checkpointing, data pipeline, dry-run parser math."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "nested": {"b": jnp.ones((5,), jnp.int32)},
+                "lst": [jnp.zeros((2, 2))]}
+        save_checkpoint(str(tmp_path / "ck"), tree, step=7,
+                        meta={"arch": "x"})
+        restored, step = load_checkpoint(str(tmp_path / "ck"), tree)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+        save_checkpoint(str(tmp_path / "ck"), {"a": jnp.ones((2, 2))})
+        with pytest.raises(ValueError):
+            load_checkpoint(str(tmp_path / "ck"), {"a": jnp.ones((3, 3))})
+
+    def test_missing_leaf_raises(self, tmp_path):
+        from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+        save_checkpoint(str(tmp_path / "ck"), {"a": jnp.ones((2,))})
+        with pytest.raises(KeyError):
+            load_checkpoint(str(tmp_path / "ck"),
+                            {"a": jnp.ones((2,)), "b": jnp.ones((2,))})
+
+
+class TestDataPipeline:
+    def test_actor_pipeline_delivers_all_batches_in_order_shape(self):
+        from repro.data.pipeline import ActorDataPipeline, SyntheticLM
+
+        src = SyntheticLM(vocab_size=128, batch=2, seq_len=16, seed=1)
+        batches = list(ActorDataPipeline(src, num_batches=7, buffers=2))
+        assert len(batches) == 7
+        for b in batches:
+            assert b.shape == (2, 17) and b.dtype == np.int32
+            assert (b >= 0).all() and (b < 128).all()
+
+    def test_backpressure_bounds_buffering(self):
+        """A slow consumer must not let the loader run unboundedly ahead."""
+        import time
+
+        from repro.data.pipeline import ActorDataPipeline
+
+        produced = []
+
+        def src(i):
+            produced.append(i)
+            return np.zeros((1, 4), np.int32)
+
+        pipe = ActorDataPipeline(src, num_batches=20, buffers=2)
+        it = iter(pipe)
+        next(it)
+        time.sleep(0.3)     # consumer stalls
+        # loader quota 2 + preprocess 2 + stage 1 + queue 2 bounds run-ahead
+        assert len(produced) <= 8, produced
+        for _ in range(19):
+            next(it)
+        assert len(produced) == 20
+
+
+class TestDryrunParser:
+    def test_wire_bytes_factors(self):
+        from repro.launch.dryrun import wire_bytes
+
+        c = {"kind": "all_reduce", "operand_bytes": 1000, "group_size": 4}
+        assert wire_bytes(c) == 2 * 3 / 4 * 1000
+        c["kind"] = "reduce_scatter"
+        assert wire_bytes(c) == 3 / 4 * 1000
+        c["kind"] = "all_gather"
+        assert wire_bytes(c) == 3 * 1000
+        c["kind"] = "all_to_all"
+        assert wire_bytes(c) == 3 / 4 * 1000
+        c["group_size"] = 1
+        assert wire_bytes(c) == 0.0
+
+    def test_parser_while_and_calls(self):
+        from repro.launch.dryrun import _HloTextParser
+
+        text = """
+func.func public @main(%arg0: tensor<8x8xf32>) {
+  %c = stablehlo.constant dense<5> : tensor<i32>
+  %w:2 = stablehlo.while(%iterArg = %arg0, %iterArg_0 = %c)
+  cond {
+    %c_1 = stablehlo.constant dense<5> : tensor<i32>
+    %p = stablehlo.compare  LT, %iterArg_0, %c_1,  SIGNED : (tensor<i32>, tensor<i32>) -> tensor<i1>
+    stablehlo.return %p : tensor<i1>
+  } do {
+    %d = stablehlo.dot_general %iterArg, %iterArg, contracting_dims = [1] x [0] : (tensor<8x8xf32>, tensor<8x8xf32>) -> tensor<8x8xf32>
+    %cc = func.call @inner(%d) : (tensor<8x8xf32>) -> tensor<8x8xf32>
+    stablehlo.return %cc, %iterArg_0 : tensor<8x8xf32>, tensor<i32>
+  }
+  return
+}
+func.func private @inner(%a: tensor<8x8xf32>) -> tensor<8x8xf32> {
+  %g = "stablehlo.all_gather"(%a) <{all_gather_dim = 0 : i64, replica_groups = dense<"0x00"> : tensor<2x4xi64>, use_global_device_ids}> : (tensor<8x8xf32>) -> tensor<32x8xf32>
+  return %g : tensor<8x8xf32>
+}
+"""
+        p = _HloTextParser(text)
+        # the dot inside the while body: 2*8*8*8 flops x 5 trips
+        assert p.dot_flops == 2 * 8 * 8 * 8 * 5
+        # the all_gather inside @inner, called from the while: trip 5
+        assert len(p.collectives) == 1
+        c = p.collectives[0]
+        assert c["kind"] == "all_gather" and c["group_size"] == 4
+        assert c["trip"] == 5
+        assert c["operand_bytes"] == 8 * 8 * 4
+
+
+class TestConfigsRegistry:
+    def test_all_archs_present_with_shapes(self):
+        from repro.configs.base import INPUT_SHAPES
+        from repro.configs.registry import ARCHITECTURES, supports_shape
+
+        assert len(ARCHITECTURES) == 10
+        assert len(INPUT_SHAPES) == 4
+        skips = [(a, s) for a in ARCHITECTURES for s in INPUT_SHAPES.values()
+                 if not supports_shape(ARCHITECTURES[a], s)]
+        # exactly the documented whisper x long_500k skip
+        assert skips == [("whisper-medium", INPUT_SHAPES["long_500k"])]
+
+    def test_reduced_configs_are_small(self):
+        from repro.configs.registry import ARCHITECTURES
+
+        for cfg in ARCHITECTURES.values():
+            r = cfg.reduced()
+            assert r.num_layers == 2
+            assert r.d_model <= 512
+            assert (r.num_experts or 0) <= 4
