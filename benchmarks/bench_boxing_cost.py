@@ -20,6 +20,7 @@ def main():
     from jax.sharding import PartitionSpec as P
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.compat import shard_map
     from repro.core.boxing import boxing_fn, transition_cost
     from repro.core.sbp import Sbp, ndsbp
     from repro.launch.dryrun import _HloTextParser, wire_bytes
@@ -44,9 +45,9 @@ def main():
                 return P(*(["x"] if comp.axis == 0 else [None, "x"]))
             return P()
 
-        prog = jax.jit(jax.shard_map(
+        prog = jax.jit(shard_map(
             fn, mesh=mesh, in_specs=(pspec(src_clean),),
-            out_specs=pspec(dst_clean), check_vma=False))
+            out_specs=pspec(dst_clean), check=False))
         x = jnp.asarray(np.random.default_rng(0).normal(size=shape),
                         jnp.float32)
         lowered = prog.lower(x)

@@ -19,6 +19,7 @@ def main():
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from benchmarks._util import emit, timeit
+    from repro.compat import shard_map
 
     mesh = jax.make_mesh((8,), ("model",))
     V, D, N = 1 << 18, 64, 4096
@@ -38,12 +39,12 @@ def main():
     def replicated(tbl, ix):
         return tbl[ix]
 
-    p1 = jax.jit(jax.shard_map(sharded, mesh=mesh,
-                               in_specs=(P("model"), P()), out_specs=P(),
-                               check_vma=False))
-    p2 = jax.jit(jax.shard_map(replicated, mesh=mesh,
-                               in_specs=(P(), P()), out_specs=P(),
-                               check_vma=False))
+    p1 = jax.jit(shard_map(sharded, mesh=mesh,
+                           in_specs=(P("model"), P()), out_specs=P(),
+                           check=False))
+    p2 = jax.jit(shard_map(replicated, mesh=mesh,
+                           in_specs=(P(), P()), out_specs=P(),
+                           check=False))
     us1 = timeit(p1, table, ids, iters=5)
     us2 = timeit(p2, table, ids, iters=5)
     emit("embedding_mp/vocab_split_S0", us1,

@@ -20,6 +20,7 @@ def main():
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from benchmarks._util import emit, timeit
+    from repro.compat import shard_map
     from repro.kernels.softmax_xent.ref import combine_stats, local_stats_ref
     from repro.launch.dryrun import _HloTextParser, wire_bytes
 
@@ -43,9 +44,9 @@ def main():
         return jax.lax.pmean(tok.mean(), "model")
 
     for name, fn in (("hierarchical", hierarchical), ("allgather", allgather)):
-        prog = jax.jit(jax.shard_map(
+        prog = jax.jit(shard_map(
             fn, mesh=mesh, in_specs=(P(None, "model"), P()),
-            out_specs=P(), check_vma=False))
+            out_specs=P(), check=False))
         lowered = prog.lower(logits, labels)
         parsed = sum(wire_bytes(c) * c["trip"]
                      for c in _HloTextParser(lowered.as_text()).collectives)

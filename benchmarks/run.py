@@ -5,6 +5,8 @@ subprocesses with placeholder host devices (the main process keeps 1 device).
 
   Table 2  -> bench_boxing_cost           (subprocess, 8 devices)
   Fig 6    -> bench_pipeline_registers    (in-process, simulator)
+  §4.3     -> bench_actor_pipeline        (subprocess, 8 devices; also
+              writes BENCH_actor_pipeline.json: serialized vs 1F1B makespan)
   Fig 9    -> bench_data_pipeline         (in-process, threads)
   Fig 10   -> bench_parallelisms dp8      (subprocess, 8 devices)
   Fig 11/12-> bench_model_parallel_softmax(subprocess, 8 devices)
@@ -32,8 +34,9 @@ def main() -> None:
 
     run("pipeline_registers", bench_pipeline_registers.main)
     run("data_pipeline", bench_data_pipeline.main)
-    for mod in ("bench_boxing_cost", "bench_model_parallel_softmax",
-                "bench_embedding_mp", "bench_parallelisms"):
+    for mod in ("bench_boxing_cost", "bench_actor_pipeline",
+                "bench_model_parallel_softmax", "bench_embedding_mp",
+                "bench_parallelisms"):
         run(mod, lambda m=mod: run_subprocess_bench(m, devices=8))
 
     if failures:

@@ -1,0 +1,90 @@
+"""Actor-driven pipeline execution of a compiled physical program (§4.3).
+
+The missing seam of the reproduction, now wired: the SBP compiler cuts the
+logical graph into stages and lowers each to its own jitted program; the
+actor runtime's register quotas alone turn those stage callables into a
+pipelined, back-pressured executor — no scheduler in sight.
+
+Run:  PYTHONPATH=src python examples/actor_pipeline.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core.graph import LogicalGraph, partition_stages
+from repro.core.lowering import lower_plan, lower_stages
+from repro.core.placement import Placement
+from repro.core.planner import plan
+from repro.runtime import ActorPipelineExecutor
+
+STAGES, MICROBATCHES = 4, 8
+
+
+def build():
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (64, 128))
+    for i in range(STAGES):
+        w = g.input(f"w{i}", (128, 128))
+        h = g.matmul(h, w, name=f"mm{i}")
+        h = g.unary(h, "relu", name=f"relu{i}")
+    return g
+
+
+def main():
+    import jax
+
+    g = build()
+    p = plan(g)
+    part = partition_stages(g, num_stages=STAGES)
+    print(part.describe(g))
+
+    # one device per stage: the paper's MPMD placement
+    devs = jax.devices()
+    if len(devs) < STAGES:
+        raise SystemExit(
+            f"need {STAGES} devices for one-per-stage placement, have "
+            f"{len(devs)}; run with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={STAGES} or more")
+    stage_meshes = [g.placement.to_mesh(devices=[devs[s]])
+                    for s in range(STAGES)]
+    staged = lower_stages(g, p, part, stage_meshes=stage_meshes)
+    for st in staged.stages:
+        print(f"  stage {st.index}: {list(st.input_names)} -> "
+              f"{list(st.output_names)}  on {devs[st.index]}")
+
+    rng = np.random.default_rng(0)
+    inputs = {t.name: rng.normal(size=t.shape).astype(np.float32)
+              for t in g.inputs}
+
+    mono = lower_plan(g, p, g.placement.to_mesh(devices=[devs[0]]))
+    ref = np.asarray(mono(*(inputs[t.name] for t in g.inputs))[0])
+
+    for label, regs in (("serialized (R=1)", [1] * STAGES),
+                        ("1F1B quota     ", [STAGES - s for s in range(STAGES)])):
+        ex = ActorPipelineExecutor(staged, ["x"], MICROBATCHES, regs=regs)
+        got = ex.run(inputs)       # first run includes jit compile
+        got = ex.run(inputs)
+        ok = np.array_equal(got[0], ref) or np.allclose(got[0], ref, rtol=1e-4)
+        print(f"{label}: makespan {ex.last_makespan * 1e3:7.1f} ms   "
+              f"matches monolithic: {ok}")
+        spans = ex.last_history
+        for s in range(STAGES):
+            hist = spans[f"stage{s}"]
+            busy = sum(e - b for b, e in hist)
+            print(f"    stage{s}: {len(hist)} fires, busy {busy * 1e3:6.1f} ms, "
+                  f"first fire at {hist[0][0] * 1e3:6.1f} ms")
+    print("(stage compute here is sub-ms host work, so the two schedules can "
+          "tie on a small CPU; benchmarks/bench_actor_pipeline.py emulates "
+          "per-stage device latency and shows the quota-driven speedup)")
+
+
+if __name__ == "__main__":
+    main()

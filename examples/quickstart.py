@@ -67,7 +67,7 @@ def planner_demo():
     xv = rng.normal(size=(64, 128)).astype(np.float32)
     w1v = rng.normal(size=(128, 512)).astype(np.float32)
     w2v = rng.normal(size=(512, 128)).astype(np.float32)
-    out = np.asarray(prog(xv, w1v, w2v))
+    out = np.asarray(prog(xv, w1v, w2v)[0])  # programs return a sink tuple
     ref = np.maximum(xv @ w1v, 0) @ w2v
     print("physical == logical:",
           np.allclose(out, ref, rtol=1e-3, atol=1e-2))  # fp32 sum order

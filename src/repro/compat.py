@@ -1,0 +1,20 @@
+"""JAX API compatibility shims.
+
+``shard_map`` graduated from ``jax.experimental`` to the ``jax`` namespace
+(and its ``check_rep`` kwarg became ``check_vma``) across jax versions; the
+repo must run on both. Import :func:`shard_map` from here instead of jax.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+else:  # pragma: no cover - jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check)

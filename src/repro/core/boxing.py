@@ -43,6 +43,10 @@ def transition_cost(src: Sbp, dst: Sbp, tensor_bytes: float,
     right-hand column (producer and consumer on disjoint device sets).
     """
     p2 = p1 if p2 is None else p2
+    if not disjoint and p2 != p1:
+        raise ValueError(
+            f"same-device transition requires p2 == p1 (got p1={p1}, p2={p2}); "
+            "pass disjoint=True for transitions between distinct device sets")
     T = float(tensor_bytes)
     s, d = src, dst
 

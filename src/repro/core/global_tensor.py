@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
+from repro.compat import shard_map
 from repro.core.boxing import boxing_fn
 from repro.core.placement import Placement
 from repro.core.sbp import B, Broadcast, NdSbp, Partial, Split, ndsbp
@@ -66,10 +67,10 @@ class GlobalTensor:
         axis_names = self.placement.axis_names
         mesh_shape = self.placement.mesh_shape()
         fn = boxing_fn(self.sbp, dst, axis_names, mesh_shape, self.logical_shape)
-        out = jax.jit(jax.shard_map(
+        out = jax.jit(shard_map(
             fn, mesh=self.mesh,
             in_specs=(self._pspec(self.sbp),),
-            out_specs=self._pspec(dst), check_vma=False))(self.data)
+            out_specs=self._pspec(dst), check=False))(self.data)
         return GlobalTensor(out, self.placement, dst, self.mesh, self.logical_shape)
 
     def _pspec(self, sbp: NdSbp) -> PartitionSpec:
@@ -140,10 +141,10 @@ def matmul(x: GlobalTensor, w: GlobalTensor) -> GlobalTensor:
     def local(xl, wl):
         return jnp.dot(xl, wl)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         local, mesh=x.mesh,
         in_specs=(x._pspec(x.sbp), w._pspec(w.sbp)),
-        out_specs=x._pspec(out_sbp), check_vma=False))
+        out_specs=x._pspec(out_sbp), check=False))
     data = fn(x.data, w.data)
     return GlobalTensor(data, x.placement, out_sbp, x.mesh, out_shape)
 
@@ -156,7 +157,7 @@ def reduce_partial(x: GlobalTensor) -> GlobalTensor:
     mesh_shape = x.placement.mesh_shape()
     dst = NdSbp(tuple(Broadcast() if c.is_partial else c for c in x.sbp))
     fn = boxing_fn(x.sbp, dst, axis_names, mesh_shape, x.logical_shape)
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(shard_map(
         fn, mesh=x.mesh, in_specs=(x._pspec(x.sbp),),
-        out_specs=x._pspec(dst), check_vma=False))(x.data)
+        out_specs=x._pspec(dst), check=False))(x.data)
     return GlobalTensor(out, x.placement, dst, x.mesh, x.logical_shape)

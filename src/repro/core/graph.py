@@ -7,6 +7,7 @@ the rest minimizing Table-2 boxing cost.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -59,6 +60,7 @@ class LOp:
     inputs: Tuple[LTensor, ...]
     output: LTensor
     name: str
+    stage: Optional[int] = None             # pipeline-stage annotation (§4.3)
 
     def __repr__(self):
         ins = ", ".join(t.name for t in self.inputs)
@@ -73,6 +75,18 @@ class LogicalGraph:
         self.tensors: List[LTensor] = []
         self.ops: List[LOp] = []
         self.inputs: List[LTensor] = []
+        self._current_stage: Optional[int] = None
+
+    @contextlib.contextmanager
+    def stage(self, index: int):
+        """Annotate ops built inside the block as pipeline stage ``index``."""
+        if index < 0:
+            raise ValueError(f"stage index must be >= 0, got {index}")
+        prev, self._current_stage = self._current_stage, index
+        try:
+            yield self
+        finally:
+            self._current_stage = prev
 
     # -- construction ------------------------------------------------------
     def input(self, name: str, shape: Sequence[int], dtype: str = "float32",
@@ -96,7 +110,7 @@ class LogicalGraph:
         oname = name or f"{op_name}_{idx}"
         out = LTensor(self, tuple(out_shape), out_dtype or inputs[0].dtype,
                       f"{oname}.out")
-        op = LOp(spec, tuple(inputs), out, oname)
+        op = LOp(spec, tuple(inputs), out, oname, stage=self._current_stage)
         out.producer = op
         self.tensors.append(out)
         self.ops.append(op)
@@ -139,3 +153,127 @@ class LogicalGraph:
 
     def topo_ops(self) -> List[LOp]:
         return list(self.ops)  # construction order is already topological
+
+    def sinks(self) -> List[LTensor]:
+        """Graph outputs: op outputs never consumed by another op."""
+        consumed = {t.name for op in self.ops for t in op.inputs}
+        return [op.output for op in self.ops if op.output.name not in consumed]
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-stage partitioning (paper §4.3: the compiler cuts the physical
+# graph into stages; the actor protocol's register quotas then pipeline them).
+# ---------------------------------------------------------------------------
+
+def op_cost(op: LOp) -> float:
+    """Rough FLOP estimate used to balance stages when the user didn't
+    annotate. Matmul dominates real graphs; everything else counts its
+    output elements once."""
+    kind = op.spec.name
+    out_elems = 1
+    for s in op.output.shape:
+        out_elems *= s
+    if kind == "matmul":
+        k = op.inputs[0].shape[-1]
+        return 2.0 * out_elems * k
+    if kind == "embedding":
+        return float(out_elems)
+    return float(out_elems)
+
+
+@dataclasses.dataclass
+class StagePartition:
+    """A cut of the logical DAG into ``num_stages`` pipeline stages.
+
+    ``stage_of`` maps op name -> stage index. The assignment is *monotone*:
+    every edge goes from a stage to the same or a later stage, so the stage
+    graph is acyclic and each stage can be lowered (and executed by an actor)
+    independently.
+    """
+
+    num_stages: int
+    stage_of: Dict[str, int]
+
+    def ops_in(self, graph: "LogicalGraph", stage: int) -> List[LOp]:
+        return [op for op in graph.topo_ops() if self.stage_of[op.name] == stage]
+
+    def describe(self, graph: "LogicalGraph") -> str:
+        lines = [f"=== stage partition ({self.num_stages} stages) ==="]
+        for s in range(self.num_stages):
+            ops = self.ops_in(graph, s)
+            cost = sum(op_cost(op) for op in ops)
+            lines.append(f"  stage {s}: {[op.name for op in ops]}"
+                         f"  (~{cost:,.0f} flop)")
+        return "\n".join(lines)
+
+
+def _validate_partition(graph: LogicalGraph, stage_of: Dict[str, int],
+                        num_stages: int) -> None:
+    for op in graph.ops:
+        if op.name not in stage_of:
+            raise ValueError(f"op {op.name} has no stage assignment")
+        s = stage_of[op.name]
+        if not 0 <= s < num_stages:
+            raise ValueError(f"op {op.name} assigned stage {s}, outside "
+                             f"[0, {num_stages})")
+        for t in op.inputs:
+            if t.producer is not None and stage_of[t.producer.name] > s:
+                raise ValueError(
+                    f"non-monotone stage assignment: {t.producer.name} "
+                    f"(stage {stage_of[t.producer.name]}) feeds {op.name} "
+                    f"(stage {s}); producers must not be in a later stage")
+    used = {stage_of[op.name] for op in graph.ops}
+    for s in range(num_stages):
+        if s not in used:
+            raise ValueError(f"stage {s} is empty")
+
+
+def partition_stages(graph: LogicalGraph,
+                     num_stages: Optional[int] = None) -> StagePartition:
+    """Cut the graph into pipeline stages.
+
+    If any op carries a user annotation (built inside ``graph.stage(k)``),
+    every op must be annotated and the annotation is validated for
+    monotonicity. Otherwise the topologically ordered op list is split into
+    ``num_stages`` contiguous segments of near-equal :func:`op_cost`
+    (contiguity in topo order makes monotonicity automatic).
+    """
+    annotated = [op for op in graph.ops if op.stage is not None]
+    if annotated:
+        if len(annotated) != len(graph.ops):
+            missing = [op.name for op in graph.ops if op.stage is None]
+            raise ValueError(
+                f"mixed stage annotation: ops {missing} have no stage; "
+                "annotate every op or none")
+        stage_of = {op.name: op.stage for op in graph.ops}
+        n = max(stage_of.values()) + 1
+        if num_stages is not None and num_stages != n:
+            raise ValueError(f"num_stages={num_stages} but annotations span "
+                             f"{n} stages")
+        _validate_partition(graph, stage_of, n)
+        return StagePartition(n, stage_of)
+
+    if num_stages is None:
+        raise ValueError("graph has no stage annotations; pass num_stages")
+    ops = graph.topo_ops()
+    if not 1 <= num_stages <= len(ops):
+        raise ValueError(f"num_stages={num_stages} not in [1, {len(ops)}]")
+    costs = [op_cost(op) for op in ops]
+    total = sum(costs)
+    stage_of: Dict[str, int] = {}
+    acc, s, count_in_stage = 0.0, 0, 0
+    for i, (op, c) in enumerate(zip(ops, costs)):
+        remaining = len(ops) - i         # ops left, including this one
+        # cut before this op when the current stage is non-empty and either
+        # (a) the stages after s would otherwise run out of ops, or (b) this
+        # op crosses the equal-cost boundary by more than half its cost
+        if count_in_stage > 0 and s < num_stages - 1 and (
+                remaining <= num_stages - s - 1
+                or acc + c / 2 > total * (s + 1) / num_stages):
+            s += 1
+            count_in_stage = 0
+        stage_of[op.name] = s
+        acc += c
+        count_in_stage += 1
+    _validate_partition(graph, stage_of, num_stages)
+    return StagePartition(num_stages, stage_of)

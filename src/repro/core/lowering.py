@@ -6,20 +6,33 @@ planner's boxing edge becomes an explicit ``jax.lax`` collective
 (:func:`repro.core.boxing.boxing_fn`). Partial-value tensors flow through as
 real unreduced per-device arrays, so deferred reduction (§3.3) happens exactly
 as planned.
+
+Two entry points share one subgraph lowerer:
+
+* :func:`lower_plan` — the whole graph as one jitted ``shard_map`` program
+  (:class:`PhysicalProgram`).
+* :func:`lower_stages` — the graph cut by a
+  :class:`repro.core.graph.StagePartition` into per-stage jitted programs
+  (:class:`StagedProgram`), with boxing at stage boundaries. This is the
+  compiler half of actor-driven pipeline execution (§4.3): the runtime half
+  lives in :mod:`repro.runtime.pipeline`.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
 from repro.core.boxing import boxing_fn
-from repro.core.graph import LogicalGraph, LOp
+from repro.core.graph import LogicalGraph, LOp, LTensor, StagePartition
 from repro.core.planner import Plan
 from repro.core.sbp import Broadcast, NdSbp, Partial, Split
+
+from repro.compat import shard_map
 
 
 def _split_axes_for(sig: NdSbp, tensor_axis: int, axis_names: Sequence[str]) -> List[str]:
@@ -143,38 +156,53 @@ def _local_op(op: LOp, in_sigs: Tuple[NdSbp, ...], out_sig: NdSbp,
     raise NotImplementedError(f"no local lowering for op kind {kind}")
 
 
-def lower_plan(graph: LogicalGraph, plan: Plan, mesh) -> "PhysicalProgram":
+def _materialized(sig: NdSbp) -> NdSbp:
+    """Partial-free storage signature: P components become B (all-reduce).
+
+    Tensors that cross a jit boundary (graph outputs, pipeline-stage
+    boundaries) must be real globally-addressable arrays — partial-value only
+    exists *inside* a shard_map program.
+    """
+    return NdSbp(tuple(Broadcast() if c.is_partial else c for c in sig))
+
+
+def _lower_subgraph(graph: LogicalGraph, plan: Plan, mesh,
+                    ops: Sequence[LOp],
+                    in_tensors: Sequence[LTensor],
+                    out_tensors: Sequence[LTensor],
+                    in_sbp: Dict[str, NdSbp],
+                    out_sbp: Dict[str, NdSbp]):
+    """shard_map program running ``ops`` from ``in_tensors`` to ``out_tensors``.
+
+    ``in_sbp``/``out_sbp`` give the *stored* (partial-free) signatures at the
+    subgraph boundary; inside, tensors follow the plan exactly, including
+    partial-value storage.
+    """
     axis_names = tuple(mesh.axis_names)
     mesh_shape = tuple(mesh.devices.shape)
 
-    in_specs, out_specs = [], []
-    for t in graph.inputs:
-        sig = plan.tensor_sbp[t.name]
-        if sig.has_partial:
-            raise ValueError(f"graph input {t.name} planned as partial-value")
-        in_specs.append(graph.placement.partition_spec(sig))
+    for t in in_tensors:
+        if in_sbp[t.name].has_partial:
+            raise ValueError(f"boundary input {t.name} stored as partial-value")
+    for t in out_tensors:
+        if out_sbp[t.name].has_partial:
+            raise ValueError(f"boundary output {t.name} stored as partial-value")
 
-    consumed = set()
-    for op in graph.ops:
-        for t in op.inputs:
-            consumed.add(t.name)
-    sinks = [op.output for op in graph.ops if op.output.name not in consumed]
-    for t in sinks:
-        sig = plan.tensor_sbp[t.name]
-        if sig.has_partial:
-            raise ValueError(f"graph output {t.name} planned as partial-value; "
-                             "planner should have boxed it")
-        out_specs.append(graph.placement.partition_spec(sig))
+    in_specs = tuple(graph.placement.partition_spec(in_sbp[t.name])
+                     for t in in_tensors)
+    out_specs = tuple(graph.placement.partition_spec(out_sbp[t.name])
+                      for t in out_tensors)
 
     def local_program(*local_inputs):
-        env = {t.name: v for t, v in zip(graph.inputs, local_inputs)}
-        for op in graph.topo_ops():
+        env = {t.name: v for t, v in zip(in_tensors, local_inputs)}
+        cur_sbp = {t.name: in_sbp[t.name] for t in in_tensors}
+        for op in ops:
             in_sigs = plan.op_in_sbp[op.name]
             raw_sig = plan.op_out_sbp[op.name]
             stored_sig = plan.tensor_sbp[op.output.name]
             args = []
             for t, want in zip(op.inputs, in_sigs):
-                have = plan.tensor_sbp[t.name]
+                have = cur_sbp[t.name]
                 v = env[t.name]
                 if have != want:
                     v = boxing_fn(have, want, axis_names, mesh_shape, t.shape)(v)
@@ -185,25 +213,192 @@ def lower_plan(graph: LogicalGraph, plan: Plan, mesh) -> "PhysicalProgram":
                 val = boxing_fn(raw_sig, stored_sig, axis_names, mesh_shape,
                                 op.output.shape)(val)
             env[op.output.name] = val
-        return tuple(env[t.name] for t in sinks)
+            cur_sbp[op.output.name] = stored_sig
+        outs = []
+        for t in out_tensors:
+            v, have, want = env[t.name], cur_sbp[t.name], out_sbp[t.name]
+            if have != want:  # boundary boxing (e.g. P -> B materialization)
+                v = boxing_fn(have, want, axis_names, mesh_shape, t.shape)(v)
+            outs.append(v)
+        return tuple(outs)
 
-    mapped = jax.shard_map(local_program, mesh=mesh,
-                           in_specs=tuple(in_specs), out_specs=tuple(out_specs),
-                           check_vma=False)
+    return shard_map(local_program, mesh=mesh,
+                     in_specs=in_specs, out_specs=out_specs)
+
+
+def lower_plan(graph: LogicalGraph, plan: Plan, mesh) -> "PhysicalProgram":
+    for t in graph.inputs:
+        if plan.tensor_sbp[t.name].has_partial:
+            raise ValueError(f"graph input {t.name} planned as partial-value")
+    sinks = graph.sinks()
+    for t in sinks:
+        if plan.tensor_sbp[t.name].has_partial:
+            raise ValueError(f"graph output {t.name} planned as partial-value; "
+                             "planner should have boxed it")
+    boundary = {t.name: plan.tensor_sbp[t.name] for t in list(graph.inputs) + sinks}
+    mapped = _lower_subgraph(graph, plan, mesh, graph.topo_ops(),
+                             graph.inputs, sinks, boundary, boundary)
     return PhysicalProgram(graph, plan, mesh, mapped, sinks)
 
 
 class PhysicalProgram:
-    """Executable physical graph: shard_map program + metadata."""
+    """Executable physical graph: shard_map program + metadata.
+
+    Calling it always returns a tuple of sink values, in ``self.sinks``
+    order — including for single-sink graphs.
+    """
 
     def __init__(self, graph, plan, mesh, fn, sinks):
         self.graph, self.plan, self.mesh = graph, plan, mesh
         self._fn = jax.jit(fn)
         self.sinks = sinks
 
-    def __call__(self, *global_inputs):
-        outs = self._fn(*global_inputs)
-        return outs if len(outs) > 1 else outs[0]
+    def __call__(self, *global_inputs) -> Tuple:
+        return tuple(self._fn(*global_inputs))
 
     def lower(self, *global_inputs):
         return self._fn.lower(*global_inputs)
+
+
+# ---------------------------------------------------------------------------
+# Stage-partitioned lowering (paper §4.3): each pipeline stage becomes its own
+# jitted program; tensors crossing a stage boundary are stored partial-free.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StageProgram:
+    """One lowered pipeline stage: a jitted callable plus its interface.
+
+    ``fn(*values)`` takes one value per ``input_names`` entry (graph inputs
+    and/or boundary tensors from earlier stages) and returns a tuple with one
+    value per ``output_names`` entry (boundary tensors and/or graph sinks).
+    """
+
+    index: int
+    fn: Callable
+    input_names: Tuple[str, ...]
+    output_names: Tuple[str, ...]
+    mesh: object = None
+    in_shardings: Optional[Tuple] = None    # set when stages own distinct meshes
+
+    def place_inputs(self, values: Sequence) -> List:
+        """Transfer boundary values onto this stage's devices (the explicit
+        cross-stage send; a no-op when all stages share one mesh)."""
+        if self.in_shardings is None:
+            return list(values)
+        return [jax.device_put(v, sh)
+                for v, sh in zip(values, self.in_shardings)]
+
+
+class StagedProgram:
+    """A pipeline of independently-jitted stage programs.
+
+    Sequential execution (``__call__``) is the reference semantics; the actor
+    runtime adapter (:mod:`repro.runtime.pipeline`) drives the same stage
+    callables concurrently, one actor per stage, with register quotas bounding
+    in-flight microbatches.
+    """
+
+    def __init__(self, graph: LogicalGraph, plan: Plan,
+                 partition: StagePartition, stages: List[StageProgram],
+                 sinks: List[LTensor], boundary_sbp: Dict[str, NdSbp]):
+        self.graph, self.plan, self.partition = graph, plan, partition
+        self.stages = stages
+        self.sinks = sinks
+        self.boundary_sbp = boundary_sbp
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def input_names(self) -> List[str]:
+        return [t.name for t in self.graph.inputs]
+
+    def __call__(self, *global_inputs) -> Tuple:
+        if len(global_inputs) != len(self.graph.inputs):
+            raise ValueError(f"expected {len(self.graph.inputs)} inputs, "
+                             f"got {len(global_inputs)}")
+        env = {t.name: v for t, v in zip(self.graph.inputs, global_inputs)}
+        for stage in self.stages:
+            args = stage.place_inputs([env[n] for n in stage.input_names])
+            outs = stage.fn(*args)
+            env.update(zip(stage.output_names, outs))
+        return tuple(env[t.name] for t in self.sinks)
+
+
+def lower_stages(graph: LogicalGraph, plan: Plan, partition: StagePartition,
+                 mesh=None, stage_meshes: Optional[Sequence] = None
+                 ) -> StagedProgram:
+    """Lower each pipeline stage of ``partition`` independently.
+
+    ``mesh`` lowers every stage onto the same device mesh (stages share
+    devices; pipelining overlaps host work and microbatches). Alternatively
+    ``stage_meshes`` gives one mesh per stage — same axis names/sizes but
+    possibly *disjoint* devices, the paper's placement of one stage per device
+    group. Tensors crossing a stage boundary are stored with their
+    :func:`_materialized` (partial-free) signature and boxed on exit.
+    """
+    if stage_meshes is not None:
+        if len(stage_meshes) != partition.num_stages:
+            raise ValueError(f"need {partition.num_stages} stage meshes, "
+                             f"got {len(stage_meshes)}")
+        meshes = list(stage_meshes)
+    else:
+        if mesh is None:
+            raise ValueError("pass either mesh or stage_meshes")
+        meshes = [mesh] * partition.num_stages
+
+    sinks = graph.sinks()
+    sink_names = {t.name for t in sinks}
+    producer_stage = {t.name: partition.stage_of[t.producer.name]
+                      for t in graph.tensors if t.producer is not None}
+
+    # tensors leaving each stage: consumed by a later stage, or graph sinks
+    stage_out: Dict[int, List[LTensor]] = {s: [] for s in range(partition.num_stages)}
+    boundary_sbp: Dict[str, NdSbp] = {}
+    for op in graph.topo_ops():
+        t = op.output
+        ps = producer_stage[t.name]
+        consumer_stages = {partition.stage_of[c.name] for c in graph.consumers(t)}
+        crosses = any(cs > ps for cs in consumer_stages)
+        if crosses or t.name in sink_names:
+            stage_out[ps].append(t)
+            boundary_sbp[t.name] = _materialized(plan.tensor_sbp[t.name])
+
+    for t in graph.inputs:
+        if plan.tensor_sbp[t.name].has_partial:
+            raise ValueError(f"graph input {t.name} planned as partial-value")
+
+    stages: List[StageProgram] = []
+    for s in range(partition.num_stages):
+        ops = partition.ops_in(graph, s)
+        in_here = {t.name for op in ops for t in op.inputs}
+        produced_here = {op.output.name for op in ops}
+        # stage inputs in deterministic order: graph inputs first, then
+        # boundary tensors in production (topo) order
+        in_tensors: List[LTensor] = [
+            t for t in graph.inputs if t.name in in_here]
+        in_tensors += [
+            t for sp in range(s) for t in stage_out[sp]
+            if t.name in in_here and t.name not in produced_here]
+        in_sbp = {}
+        for t in in_tensors:
+            in_sbp[t.name] = (plan.tensor_sbp[t.name] if t.producer is None
+                              else boundary_sbp[t.name])
+        out_tensors = stage_out[s]
+        out_sbp = {t.name: boundary_sbp[t.name] for t in out_tensors}
+        mapped = _lower_subgraph(graph, plan, meshes[s], ops,
+                                 in_tensors, out_tensors, in_sbp, out_sbp)
+        in_shardings = None
+        if stage_meshes is not None:
+            in_shardings = tuple(
+                jax.sharding.NamedSharding(
+                    meshes[s], graph.placement.partition_spec(in_sbp[t.name]))
+                for t in in_tensors)
+        stages.append(StageProgram(
+            index=s, fn=jax.jit(mapped),
+            input_names=tuple(t.name for t in in_tensors),
+            output_names=tuple(t.name for t in out_tensors),
+            mesh=meshes[s], in_shardings=in_shardings))
+    return StagedProgram(graph, plan, partition, stages, sinks, boundary_sbp)

@@ -1,5 +1,7 @@
 from repro.runtime.actor import Actor, ActorSpec, build_actors
 from repro.runtime.messages import Ack, Req, make_actor_id, parse_actor_id
-from repro.runtime.pipeline import analyze, pipeline_specs, plan_registers
+from repro.runtime.pipeline import (ActorPipelineExecutor, analyze,
+                                    pipeline_specs, plan_registers,
+                                    stage_actor_specs)
 from repro.runtime.scheduler import CommModel, SimResult, Simulator, simulate
 from repro.runtime.threaded import ThreadedRuntime

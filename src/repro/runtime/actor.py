@@ -38,6 +38,7 @@ class ActorSpec:
     duration: Any = 1.0                     # sim-mode cost (float or fn(version))
     max_fires: Optional[int] = None         # e.g. #batches for source actors
     out_nbytes: int = 0                     # for comm cost in sim mode
+    wants_version: bool = False             # fn also receives version= kwarg
 
 
 _reg_counter = itertools.count(1)
@@ -101,7 +102,12 @@ class Actor:
             ins.append(req.payload)
             acks.append(Ack(src=self.actor_id, dst=req.src,
                             reg_id=req.reg_id, version=req.version))
-        out = self.spec.fn(*ins)
+        if self.spec.wants_version:
+            # microbatch-indexed actions (e.g. a pipeline source emitting
+            # microbatch k) need to know which firing this is
+            out = self.spec.fn(*ins, version=self.version)
+        else:
+            out = self.spec.fn(*ins)
         # allocate an out register instance
         self.out_counter -= 1
         reg_id = next(_reg_counter)

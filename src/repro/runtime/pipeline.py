@@ -18,10 +18,12 @@ compile time" the paper argues for (§2.3), done with the actor model itself.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime.actor import ActorSpec
 from repro.runtime.scheduler import CommModel, SimResult, simulate
+from repro.runtime.threaded import ThreadedRuntime
 
 
 def pipeline_specs(num_stages: int, num_microbatches: int,
@@ -106,3 +108,165 @@ def plan_registers(num_stages: int, num_microbatches: int,
         if p.makespan <= target:
             return p
     return best
+
+
+# ---------------------------------------------------------------------------
+# Actor-driven execution of lowered stage programs (compiler ∘ runtime).
+#
+# This is the seam the paper argues for: the compiler's per-stage jitted
+# callables (repro.core.lowering.lower_stages) become real ActorSpec.fn
+# bodies. One actor per stage, on its own OS thread; microbatch payloads flow
+# through Req.payload as {tensor name: value} dicts along the stage chain;
+# out-register quotas alone bound in-flight microbatches, so 1F1B-style
+# overlap *emerges* (§4.3) instead of being scheduled explicitly.
+# ---------------------------------------------------------------------------
+
+def stage_actor_specs(staged, inputs: Dict[str, Any],
+                      microbatch_inputs: Sequence[str],
+                      num_microbatches: int,
+                      regs: Optional[Sequence[int]] = None,
+                      fn_wrap: Optional[Callable[[int, Callable], Callable]] = None,
+                      ) -> Tuple[List[ActorSpec], str]:
+    """Build the actor graph executing ``staged`` over microbatches.
+
+    ``staged`` is a :class:`repro.core.lowering.StagedProgram`. ``inputs``
+    maps every graph-input name to its value; names in ``microbatch_inputs``
+    are split into ``num_microbatches`` equal chunks along axis 0 and streamed
+    by a source actor, the rest (weights) are bound to their stages at build
+    time. ``regs[s]`` is stage s's out-register quota (default: 1F1B,
+    ``num_stages - s``). ``fn_wrap(stage_index, fn)`` optionally decorates
+    each stage body (benchmarks use it to emulate device latency).
+
+    Returns ``(specs, final_stage_name)`` — collect the final stage's outputs
+    to reassemble the sinks.
+    """
+    import numpy as np
+
+    S = staged.num_stages
+    if regs is None:
+        regs = [max(1, S - s) for s in range(S)]
+    if len(regs) != S:
+        raise ValueError(f"need {S} register quotas, got {len(regs)}")
+    missing = [n for n in staged.input_names if n not in inputs]
+    if missing:
+        raise ValueError(f"missing graph inputs: {missing}")
+    mb_names = list(microbatch_inputs)
+    for n in mb_names:
+        if n not in staged.input_names:
+            raise ValueError(f"{n} is not a graph input")
+        if inputs[n].shape[0] % num_microbatches:
+            raise ValueError(
+                f"input {n} axis 0 ({inputs[n].shape[0]}) not divisible by "
+                f"num_microbatches={num_microbatches}")
+
+    # pre-split the streamed inputs: source actor emits payload dict k
+    payloads = [dict() for _ in range(num_microbatches)]
+    for n in mb_names:
+        for k, chunk in enumerate(np.split(np.asarray(inputs[n]),
+                                           num_microbatches, axis=0)):
+            payloads[k][n] = chunk
+
+    # which payload entries each stage must forward to later consumers: any
+    # tensor needed by a stage after s still travels the chain at s's output
+    graph_inputs = set(staged.input_names)
+    needed_after: List[set] = [set() for _ in range(S + 1)]
+    sink_names = {t.name for t in staged.sinks}
+    for s in reversed(range(S)):
+        payload_borne = {n for n in staged.stages[s].input_names
+                         if n in mb_names or n not in graph_inputs}
+        needed_after[s] = needed_after[s + 1] | payload_borne
+
+    specs: List[ActorSpec] = []
+    specs.append(ActorSpec(
+        name="data", fn=lambda version: payloads[version], inputs=(),
+        out_regs=2, node=0, thread=0, max_fires=num_microbatches,
+        wants_version=True))
+
+    def make_stage_fn(stage, bound):
+        def run_stage(payload):
+            incoming = stage.place_inputs(
+                [bound[n] if n in bound else payload[n]
+                 for n in stage.input_names])
+            outs = stage.fn(*incoming)
+            import jax
+            outs = jax.block_until_ready(outs)
+            carried = {n: v for n, v in payload.items()
+                       if n in needed_after[stage.index + 1] or n in sink_names}
+            carried.update(zip(stage.output_names, outs))
+            return carried
+        return run_stage
+
+    for s, stage in enumerate(staged.stages):
+        # weights and other non-streamed graph inputs are bound at build time;
+        # everything else arrives in the payload dict (microbatch chunks and
+        # boundary tensors from earlier stages)
+        bound = {n: inputs[n] for n in stage.input_names
+                 if n in graph_inputs and n not in mb_names}
+        fn = make_stage_fn(stage, bound)
+        if fn_wrap is not None:
+            fn = fn_wrap(s, fn)
+        specs.append(ActorSpec(
+            name=f"stage{s}", fn=fn,
+            inputs=("data",) if s == 0 else (f"stage{s-1}",),
+            out_regs=max(1, regs[s]), node=0, thread=s + 1,
+            max_fires=num_microbatches))
+    return specs, f"stage{S - 1}"
+
+
+class ActorPipelineExecutor:
+    """Run a :class:`StagedProgram` on the threaded actor runtime.
+
+    Each call builds a fresh actor graph (actors are single-use state
+    machines), streams ``num_microbatches`` chunks through it, and
+    reassembles the graph sinks by concatenating per-microbatch results along
+    axis 0. ``last_makespan`` / ``last_history`` expose the wall-clock
+    schedule of the most recent run.
+    """
+
+    def __init__(self, staged, microbatch_inputs: Sequence[str],
+                 num_microbatches: int, regs: Optional[Sequence[int]] = None,
+                 fn_wrap: Optional[Callable] = None):
+        self.staged = staged
+        self.microbatch_inputs = list(microbatch_inputs)
+        self.num_microbatches = num_microbatches
+        self.regs = regs
+        self.fn_wrap = fn_wrap
+        self.last_makespan: Optional[float] = None
+        self.last_history: Dict[str, List[Tuple[float, float]]] = {}
+        self.last_peak_regs: Dict[str, int] = {}
+
+    def run(self, inputs: Dict[str, Any], timeout: float = 300.0) -> Tuple:
+        import numpy as np
+
+        specs, final = stage_actor_specs(
+            self.staged, inputs, self.microbatch_inputs,
+            self.num_microbatches, regs=self.regs, fn_wrap=self.fn_wrap)
+        rt = ThreadedRuntime(specs, collect_outputs_of=final)
+        t0 = time.perf_counter()
+        outs = rt.run(timeout=timeout)
+        self.last_makespan = time.perf_counter() - t0
+        self.last_history = {name: list(a.history)
+                             for name, a in rt.by_name.items()}
+        self.last_peak_regs = {name: a.peak_regs_in_use
+                               for name, a in rt.by_name.items()}
+        if len(outs) != self.num_microbatches:
+            raise RuntimeError(
+                f"collected {len(outs)} microbatch results, expected "
+                f"{self.num_microbatches}")
+        # the final stage fires in version order on one thread, so ``outs``
+        # is already microbatch-ordered. Sinks downstream of a microbatched
+        # input are per-chunk slices -> concatenate along the batch axis;
+        # anything else (e.g. a weights-only sink) is recomputed identically
+        # every firing -> take one copy.
+        mb_dependent = set(self.microbatch_inputs)
+        for op in self.staged.graph.topo_ops():
+            if any(t.name in mb_dependent for t in op.inputs):
+                mb_dependent.add(op.output.name)
+        results = []
+        for t in self.staged.sinks:
+            if t.name in mb_dependent:
+                results.append(np.concatenate(
+                    [np.asarray(d[t.name]) for d in outs], axis=0))
+            else:
+                results.append(np.asarray(outs[0][t.name]))
+        return tuple(results)

@@ -12,6 +12,7 @@ from __future__ import annotations
 import collections
 import queue
 import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime.actor import Actor, ActorSpec, build_actors
@@ -35,6 +36,7 @@ class ThreadedRuntime:
         self._done = threading.Event()
         self._threads: List[threading.Thread] = []
         self._errors: List[BaseException] = []
+        self._t0 = time.perf_counter()
 
     def _key_of(self, actor_id: int) -> Tuple[int, int]:
         return (node_of(actor_id), thread_of(actor_id))
@@ -48,7 +50,11 @@ class ThreadedRuntime:
             progressed = False
             for actor in self.actors_on[key]:
                 while actor.ready():
+                    start = time.perf_counter() - self._t0
                     out, acks, reg_id = actor.fire()
+                    # wall-clock action history mirrors the simulator's, so
+                    # pipeline overlap can be observed on real threads too
+                    actor.history.append((start, time.perf_counter() - self._t0))
                     version = actor.version - 1
                     if self.collect == actor.spec.name:
                         with self._outputs_lock:
@@ -86,12 +92,11 @@ class ThreadedRuntime:
         bounded = [a for a in self.by_name.values() if a.spec.max_fires is not None]
         if not bounded:
             raise ValueError("threaded runtime needs at least one bounded actor")
+        self._t0 = time.perf_counter()
         for key in self.mailboxes:
             t = threading.Thread(target=self._worker, args=(key,), daemon=True)
             t.start()
             self._threads.append(t)
-        import time
-
         deadline = time.time() + timeout
         while time.time() < deadline:
             if self._errors:

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import InputShape, ModelConfig
 from repro.models.common import MeshPlan
 from repro.models.model_zoo import build_model, cache_specs, make_decode_caches
@@ -199,26 +200,26 @@ def make_train_step(cfg: ModelConfig, mesh, optimizer: AdamWConfig = None,
             return new_m, new_opt, metrics
 
         step_fn = jax.jit(
-            jax.shard_map(local_step, mesh=mesh,
-                          in_specs=(arg_specs, ospecs, bspecs),
-                          out_specs=(arg_specs, ospecs, mspecs_out),
-                          check_vma=True),
+            shard_map(local_step, mesh=mesh,
+                      in_specs=(arg_specs, ospecs, bspecs),
+                      out_specs=(arg_specs, ospecs, mspecs_out),
+                      check=True),
             donate_argnums=(0, 1))
 
         def init_opt(masters):
-            fn = jax.jit(jax.shard_map(
+            fn = jax.jit(shard_map(
                 lambda m: init_zero_state_local(m, plan), mesh=mesh,
-                in_specs=(arg_specs,), out_specs=ospecs, check_vma=False))
+                in_specs=(arg_specs,), out_specs=ospecs, check=False))
             return fn(masters)
 
-        shard_params_fn = jax.jit(jax.shard_map(
+        shard_params_fn = jax.jit(shard_map(
             lambda p: jax.tree.map(
                 lambda l: shard_master_local(l, plan), p),
             mesh=mesh, in_specs=(pspecs,), out_specs=arg_specs,
-            check_vma=False))
-        gather_params_fn = jax.jit(jax.shard_map(
+            check=False))
+        gather_params_fn = jax.jit(shard_map(
             gather_full_, mesh=mesh, in_specs=(arg_specs,),
-            out_specs=pspecs, check_vma=False))
+            out_specs=pspecs, check=False))
 
         return TrainStep(step_fn, arg_specs, pspecs, ospecs, bspecs,
                          bundle.init, init_opt, plan, zero=True,
@@ -242,16 +243,16 @@ def make_train_step(cfg: ModelConfig, mesh, optimizer: AdamWConfig = None,
         return new_params, new_opt, metrics
 
     step_fn = jax.jit(
-        jax.shard_map(local_step, mesh=mesh,
-                      in_specs=(pspecs, ospecs, bspecs),
-                      out_specs=(pspecs, ospecs, mspecs_out),
-                      check_vma=True),
+        shard_map(local_step, mesh=mesh,
+                  in_specs=(pspecs, ospecs, bspecs),
+                  out_specs=(pspecs, ospecs, mspecs_out),
+                  check=True),
         donate_argnums=(0, 1))
 
     def init_opt(params):
         from repro.optim.adamw import init_adamw
-        fn = jax.jit(jax.shard_map(init_adamw, mesh=mesh, in_specs=(pspecs,),
-                                   out_specs=ospecs, check_vma=False))
+        fn = jax.jit(shard_map(init_adamw, mesh=mesh, in_specs=(pspecs,),
+                               out_specs=ospecs, check=False))
         return fn(params)
 
     return TrainStep(step_fn, pspecs, pspecs, ospecs, bspecs, bundle.init,
@@ -294,17 +295,17 @@ def make_serve_step(cfg: ModelConfig, mesh, cache_len: int,
         return bundle.prefill(params, batch, cache_len)
 
     prefill_fn = jax.jit(
-        jax.shard_map(local_prefill, mesh=mesh, in_specs=(pspecs, bspecs),
-                      out_specs=(P(dp), cspecs), check_vma=False))
+        shard_map(local_prefill, mesh=mesh, in_specs=(pspecs, bspecs),
+                  out_specs=(P(dp), cspecs), check=False))
 
     def local_decode(params, caches, tok, pos):
         return bundle.decode_step(params, caches, tok, pos)
 
     decode_fn = jax.jit(
-        jax.shard_map(local_decode, mesh=mesh,
-                      in_specs=(pspecs, cspecs, P(dp), P(dp)),
-                      out_specs=(P(dp, plan.model_axis), cspecs),
-                      check_vma=False),
+        shard_map(local_decode, mesh=mesh,
+                  in_specs=(pspecs, cspecs, P(dp), P(dp)),
+                  out_specs=(P(dp, plan.model_axis), cspecs),
+                  check=False),
         donate_argnums=(1,))
 
     def local_init_caches(tok):
@@ -312,8 +313,8 @@ def make_serve_step(cfg: ModelConfig, mesh, cache_len: int,
         return make_decode_caches(cfg, plan, B_l, cache_len, ring=ring)
 
     init_caches_fn = jax.jit(
-        jax.shard_map(local_init_caches, mesh=mesh, in_specs=(P(dp),),
-                      out_specs=cspecs, check_vma=False))
+        shard_map(local_init_caches, mesh=mesh, in_specs=(P(dp),),
+                  out_specs=cspecs, check=False))
 
     return ServeStep(prefill_fn, decode_fn, init_caches_fn, pspecs, cspecs,
                      bspecs, plan)

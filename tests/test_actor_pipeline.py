@@ -1,0 +1,232 @@
+"""Stage-partitioned actor executor tests (paper §4.3 made executable).
+
+The compiler cuts the logical graph into pipeline stages, lowers each stage
+to its own jitted program, and the actor runtime drives them with register
+quotas — these tests pin down that the whole path is *numerically identical*
+to the monolithic ``lower_plan`` execution.
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph import LogicalGraph, partition_stages
+from repro.core.lowering import lower_plan, lower_stages
+from repro.core.placement import Placement
+from repro.core.planner import plan
+from repro.runtime import ActorPipelineExecutor, ActorSpec, ThreadedRuntime
+
+
+def _mlp_graph(depth=4, batch=32, width=64):
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (batch, width))
+    for i in range(depth):
+        w = g.input(f"w{i}", (width, width))
+        h = g.matmul(h, w, name=f"mm{i}")
+        h = g.unary(h, "relu", name=f"relu{i}")
+    return g
+
+
+def _inputs_for(g, seed=0):
+    rng = np.random.default_rng(seed)
+    return {t.name: rng.normal(size=t.shape).astype(np.float32)
+            for t in g.inputs}
+
+
+class TestStagePartition:
+    def test_balanced_partition_is_contiguous_and_monotone(self):
+        g = _mlp_graph(depth=6)
+        part = partition_stages(g, num_stages=3)
+        assert part.num_stages == 3
+        # contiguous in topo order -> stage ids nondecreasing
+        stages = [part.stage_of[op.name] for op in g.topo_ops()]
+        assert stages == sorted(stages)
+        assert set(stages) == {0, 1, 2}
+        # every edge goes forward
+        for op in g.ops:
+            for t in op.inputs:
+                if t.producer is not None:
+                    assert part.stage_of[t.producer.name] <= part.stage_of[op.name]
+
+    def test_balanced_partition_splits_cost(self):
+        from repro.core.graph import op_cost
+        g = _mlp_graph(depth=8)
+        part = partition_stages(g, num_stages=4)
+        costs = [sum(op_cost(op) for op in part.ops_in(g, s)) for s in range(4)]
+        assert max(costs) <= 2.0 * min(costs)  # near-balanced
+
+    def test_balanced_partition_backloaded_costs(self):
+        """One huge op at the end must not swallow every stage: the cut is
+        forced so each trailing stage stays non-empty."""
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (4, 4))
+        h = g.unary(x, "relu", name="cheap0")       # tiny
+        h = g.unary(h, "relu", name="cheap1")       # tiny
+        w = g.input("w", (4, 4096))
+        g.matmul(h, w, name="huge")                 # dominates cost
+        part = partition_stages(g, num_stages=3)
+        assert part.stage_of == {"cheap0": 0, "cheap1": 1, "huge": 2}
+
+    def test_user_annotations_respected(self):
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (8, 16))
+        w0 = g.input("w0", (16, 16))
+        w1 = g.input("w1", (16, 16))
+        with g.stage(0):
+            h = g.matmul(x, w0, name="a")
+        with g.stage(1):
+            y = g.matmul(h, w1, name="b")
+        part = partition_stages(g)
+        assert part.stage_of == {"a": 0, "b": 1}
+
+    def test_non_monotone_annotation_rejected(self):
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (8, 16))
+        w0 = g.input("w0", (16, 16))
+        w1 = g.input("w1", (16, 16))
+        with g.stage(1):
+            h = g.matmul(x, w0, name="a")
+        with g.stage(0):
+            g.matmul(h, w1, name="b")
+        with pytest.raises(ValueError, match="non-monotone"):
+            partition_stages(g)
+
+    def test_mixed_annotation_rejected(self):
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (8, 16))
+        w0 = g.input("w0", (16, 16))
+        w1 = g.input("w1", (16, 16))
+        with g.stage(0):
+            h = g.matmul(x, w0, name="a")
+        g.matmul(h, w1, name="b")  # unannotated
+        with pytest.raises(ValueError, match="mixed stage annotation"):
+            partition_stages(g)
+
+
+class TestStagedLowering:
+    def test_staged_equals_monolithic_bitwise(self):
+        g = _mlp_graph(depth=4)
+        p = plan(g)
+        mesh = g.placement.to_mesh()
+        part = partition_stages(g, num_stages=4)
+        mono = lower_plan(g, p, mesh)
+        staged = lower_stages(g, p, part, mesh=mesh)
+        inputs = _inputs_for(g)
+        args = [inputs[t.name] for t in g.inputs]
+        a, b = mono(*args), staged(*args)
+        assert len(a) == len(b) == 1
+        assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+    def test_physical_program_always_returns_tuple(self):
+        g = _mlp_graph(depth=2)
+        p = plan(g)
+        prog = lower_plan(g, p, g.placement.to_mesh())
+        out = prog(*[_inputs_for(g)[t.name] for t in g.inputs])
+        assert isinstance(out, tuple) and len(out) == 1
+
+
+class TestActorPipelineExecutor:
+    def test_actor_execution_bitwise_equals_monolithic(self):
+        """The acceptance criterion: actor-driven stage execution over
+        microbatches reproduces direct lower_plan execution exactly."""
+        g = _mlp_graph(depth=4, batch=32)
+        p = plan(g)
+        mesh = g.placement.to_mesh()
+        part = partition_stages(g, num_stages=4)
+        mono = lower_plan(g, p, mesh)
+        staged = lower_stages(g, p, part, mesh=mesh)
+        inputs = _inputs_for(g)
+
+        ex = ActorPipelineExecutor(staged, ["x"], num_microbatches=4)
+        got = ex.run(inputs)
+        ref = mono(*(inputs[t.name] for t in g.inputs))
+        assert np.array_equal(got[0], np.asarray(ref[0]))
+        # every stage actor fired once per microbatch
+        assert all(len(h) == 4 for h in ex.last_history.values())
+
+    def test_register_quota_bounds_in_flight_microbatches(self):
+        g = _mlp_graph(depth=4, batch=32)
+        p = plan(g)
+        part = partition_stages(g, num_stages=4)
+        staged = lower_stages(g, p, part, mesh=g.placement.to_mesh())
+        inputs = _inputs_for(g)
+        for quota in (1, 2):
+            ex = ActorPipelineExecutor(staged, ["x"], num_microbatches=8,
+                                       regs=[quota] * 4)
+            ex.run(inputs)
+            assert all(ex.last_peak_regs[f"stage{s}"] <= quota
+                       for s in range(4))
+
+    def test_annotated_stages_with_mid_graph_sink(self):
+        """Sinks produced before the last stage are carried through the chain
+        and reassembled correctly."""
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (16, 32))
+        w0 = g.input("w0", (32, 32))
+        w1 = g.input("w1", (32, 32))
+        with g.stage(0):
+            h = g.matmul(x, w0, name="mm0")
+        with g.stage(1):
+            early = g.unary(h, "relu", name="early_sink")  # sink at stage 1
+        with g.stage(1):
+            h2 = g.matmul(h, w1, name="mm1")
+        with g.stage(2):
+            g.unary(h2, "tanh", name="late_sink")
+        p = plan(g)
+        mesh = placement.to_mesh()
+        part = partition_stages(g)
+        mono = lower_plan(g, p, mesh)
+        staged = lower_stages(g, p, part, mesh=mesh)
+        inputs = _inputs_for(g)
+        ex = ActorPipelineExecutor(staged, ["x"], num_microbatches=2)
+        got = ex.run(inputs)
+        ref = mono(*(inputs[t.name] for t in g.inputs))
+        assert len(got) == len(ref) == 2
+        for gv, rv in zip(got, ref):
+            assert np.array_equal(gv, np.asarray(rv))
+
+    def test_weights_only_sink_not_concatenated(self):
+        """A sink independent of the microbatched input is recomputed
+        identically per microbatch; the executor must return one copy with
+        the reference shape, not M stacked copies."""
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (16, 32))
+        w0 = g.input("w0", (32, 32))
+        with g.stage(0):
+            h = g.matmul(x, w0, name="mm0")
+        with g.stage(1):
+            g.unary(h, "relu", name="act_sink")
+            g.unary(w0, "tanh", name="w_sink")      # weights-only sink
+        p = plan(g)
+        mesh = placement.to_mesh()
+        part = partition_stages(g)
+        mono = lower_plan(g, p, mesh)
+        staged = lower_stages(g, p, part, mesh=mesh)
+        inputs = _inputs_for(g)
+        got = ActorPipelineExecutor(staged, ["x"], num_microbatches=4).run(inputs)
+        ref = mono(*(inputs[t.name] for t in g.inputs))
+        for gv, rv in zip(got, ref):
+            assert gv.shape == np.asarray(rv).shape
+            assert np.array_equal(gv, np.asarray(rv))
+
+
+class TestThreadedZeroConsumer:
+    def test_zero_consumer_actor_recycles_immediately(self):
+        """nrefs == 0 branch of Actor.fire on the real threaded runtime: a
+        bounded producer with no consumers completes and its quota is fully
+        restored after every fire."""
+        specs = [ActorSpec("lonely", lambda version: version, (), out_regs=2,
+                           max_fires=5, thread=0, wants_version=True)]
+        rt = ThreadedRuntime(specs, collect_outputs_of="lonely")
+        outs = rt.run(timeout=10.0)
+        a = rt.by_name["lonely"]
+        assert a.fired == 5
+        assert outs == [0, 1, 2, 3, 4]
+        assert a.out_counter == 2          # quota fully restored
+        assert not a.refcount              # nothing left referenced
+        assert a.peak_regs_in_use == 0     # recycled before the peak sample

@@ -1,4 +1,9 @@
 """Hypothesis property tests for the actor protocol invariants."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements-dev.txt)")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

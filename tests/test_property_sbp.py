@@ -1,6 +1,11 @@
 """Hypothesis property tests on SBP invariants (pure logic, no devices)."""
 import math
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements-dev.txt)")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
