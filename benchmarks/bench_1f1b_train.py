@@ -1,0 +1,140 @@
+"""§4.3/§6.5 end-to-end: 1F1B *training* from register quotas alone.
+
+The compiler cuts an MLP+softmax-xent training graph into S stages, lowers
+forward/backward/optimizer programs per stage onto one device each (disjoint
+single-device meshes — the paper's MPMD placement), and the threaded actor
+runtime streams M microbatches through fwd and bwd stage actors. As in
+``bench_actor_pipeline``, the only knob compared is the forward out-register
+quota:
+
+* ``regs = [1] * S``      -> serialized: one microbatch in flight;
+* ``regs = 1F1B (S - s)`` -> pipelined: up to S-s in-flight activations per
+  stage, the 1F1B steady state, from back-pressure alone.
+
+Host CPU cores cannot stand in for S busy accelerators, so each stage body
+adds a fixed sleep emulating device time (backward 2x forward, the usual
+cost ratio); the jitted fwd/bwd computations are real and the resulting
+gradients are checked against the monolithic whole-graph program.
+
+Writes ``BENCH_1f1b_train.json`` (serialized vs 1F1B training makespan plus
+peak in-flight activation counts) so the perf trajectory is recorded across
+PRs — see docs/benchmarks.md for the schema.
+"""
+import json
+import pathlib
+import sys
+import time
+
+STAGES = 4
+MICROBATCHES = 8
+BATCH = 64
+WIDTH = 128
+FWD_LATENCY = 0.02              # emulated per-stage device time (seconds)
+BWD_LATENCY = 0.04
+
+
+def main():
+    sys.path.insert(0, "src")
+    import numpy as np
+
+    from benchmarks._util import emit
+    from repro.core.graph import LogicalGraph, partition_stages
+    from repro.core.lowering import lower_train_stages
+    from repro.core.placement import Placement
+    from repro.core.planner import plan
+    from repro.runtime import TrainPipelineExecutor
+    from repro.train.steps import make_graph_train_step
+
+    import jax
+    import jax.numpy as jnp
+
+    devs = jax.devices()
+    if len(devs) < STAGES:
+        raise RuntimeError(f"need {STAGES} devices, have {len(devs)}")
+
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (BATCH, WIDTH))
+    labels = g.input("labels", (BATCH,), dtype="int32")
+    for i in range(STAGES):
+        w = g.input(f"w{i}", (WIDTH, WIDTH))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < STAGES - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+
+    p = plan(g)
+    part = partition_stages(g, num_stages=STAGES)
+    stage_meshes = [placement.to_mesh(devices=[devs[s]]) for s in range(STAGES)]
+    tstaged = lower_train_stages(g, p, part, [f"w{i}" for i in range(STAGES)],
+                                 stage_meshes=stage_meshes)
+
+    rng = np.random.default_rng(0)
+    params = {f"w{i}": (rng.normal(size=(WIDTH, WIDTH)) * 0.1).astype(np.float32)
+              for i in range(STAGES)}
+    data = {"x": rng.normal(size=(BATCH, WIDTH)).astype(np.float32),
+            "labels": rng.integers(0, WIDTH, size=(BATCH,)).astype(np.int32)}
+
+    mono = make_graph_train_step(g, placement.to_mesh(devices=[devs[0]]),
+                                 list(params), ["x", "labels"], MICROBATCHES)
+    ref_loss, ref_grads, _ = mono.step(dict(params), data)
+
+    def with_latency(kind, stage_index, fn):
+        delay = FWD_LATENCY if kind == "fwd" else BWD_LATENCY
+
+        def body(*args):
+            out = fn(*args)
+            time.sleep(delay)
+            return out
+        return body
+
+    def measure(regs, label):
+        best, peak = None, 0
+        for _ in range(3):           # warmup included: jit compiles on run 1
+            ex = TrainPipelineExecutor(tstaged, dict(params), ["x", "labels"],
+                                       MICROBATCHES, regs=regs,
+                                       fn_wrap=with_latency)
+            loss, grads, _ = ex.step(data)
+            assert np.allclose(float(loss), float(ref_loss), rtol=1e-4), label
+            for n in params:
+                assert np.allclose(np.asarray(grads[n]),
+                                   np.asarray(ref_grads[n]),
+                                   rtol=1e-3, atol=1e-4), (label, n)
+            span = ex.last_makespan
+            best = span if best is None else min(best, span)
+            peak = max(peak, ex.peak_inflight_activations)
+        return best, peak
+
+    serialized, peak_ser = measure([1] * STAGES, "serialized")
+    quota = [max(1, STAGES - s) for s in range(STAGES)]
+    pipelined, peak_1f1b = measure(quota, "1f1b")
+    speedup = serialized / pipelined
+
+    emit("1f1b_train/serialized_r1", serialized * 1e6,
+         f"S={STAGES};M={MICROBATCHES};peak_inflight={peak_ser}")
+    emit("1f1b_train/pipelined_1f1b", pipelined * 1e6,
+         f"S={STAGES};M={MICROBATCHES};peak_inflight={peak_1f1b};"
+         f"speedup={speedup:.2f}")
+
+    out = {
+        "stages": STAGES, "microbatches": MICROBATCHES,
+        "fwd_latency_s": FWD_LATENCY, "bwd_latency_s": BWD_LATENCY,
+        "serialized_s": serialized, "pipelined_s": pipelined,
+        "speedup": speedup,
+        "quota_1f1b": quota,
+        "peak_inflight_serialized": peak_ser,
+        "peak_inflight_1f1b": peak_1f1b,
+    }
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_1f1b_train.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    if pipelined >= serialized:
+        raise RuntimeError(
+            f"pipelined training makespan {pipelined:.3f}s not below "
+            f"serialized {serialized:.3f}s")
+    if peak_1f1b > max(quota):
+        raise RuntimeError(
+            f"peak in-flight {peak_1f1b} exceeds 1F1B quota {max(quota)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,9 @@ subprocesses with placeholder host devices (the main process keeps 1 device).
   Fig 6    -> bench_pipeline_registers    (in-process, simulator)
   §4.3     -> bench_actor_pipeline        (subprocess, 8 devices; also
               writes BENCH_actor_pipeline.json: serialized vs 1F1B makespan)
+  §4.3/§6.5-> bench_1f1b_train            (subprocess, 8 devices; also
+              writes BENCH_1f1b_train.json: serialized vs 1F1B *training*
+              makespan + peak in-flight activations)
   Fig 9    -> bench_data_pipeline         (in-process, threads)
   Fig 10   -> bench_parallelisms dp8      (subprocess, 8 devices)
   Fig 11/12-> bench_model_parallel_softmax(subprocess, 8 devices)
@@ -35,8 +38,8 @@ def main() -> None:
     run("pipeline_registers", bench_pipeline_registers.main)
     run("data_pipeline", bench_data_pipeline.main)
     for mod in ("bench_boxing_cost", "bench_actor_pipeline",
-                "bench_model_parallel_softmax", "bench_embedding_mp",
-                "bench_parallelisms"):
+                "bench_1f1b_train", "bench_model_parallel_softmax",
+                "bench_embedding_mp", "bench_parallelisms"):
         run(mod, lambda m=mod: run_subprocess_bench(m, devices=8))
 
     if failures:

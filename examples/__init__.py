@@ -1,0 +1,6 @@
+"""Runnable examples. Each script inserts ``src/`` on ``sys.path`` itself, so
+both invocations work from the repo root:
+
+    python examples/<name>.py
+    python -m examples.<name>
+"""

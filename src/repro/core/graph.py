@@ -159,6 +159,28 @@ class LogicalGraph:
         consumed = {t.name for op in self.ops for t in op.inputs}
         return [op.output for op in self.ops if op.output.name not in consumed]
 
+    def downstream_of(self, names) -> set:
+        """Names of the given tensors plus every tensor transitively
+        computed from them (one forward pass over the topo order)."""
+        dep = set(names)
+        for op in self.topo_ops():
+            if any(t.name in dep for t in op.inputs):
+                dep.add(op.output.name)
+        return dep
+
+    def ancestors(self, t: LTensor) -> set:
+        """Names of ``t`` and every tensor it transitively depends on."""
+        seen: set = set()
+        stack = [t]
+        while stack:
+            cur = stack.pop()
+            if cur.name in seen:
+                continue
+            seen.add(cur.name)
+            if cur.producer is not None:
+                stack.extend(cur.producer.inputs)
+        return seen
+
 
 # ---------------------------------------------------------------------------
 # Pipeline-stage partitioning (paper §4.3: the compiler cuts the physical

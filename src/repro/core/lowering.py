@@ -327,28 +327,25 @@ class StagedProgram:
         return tuple(env[t.name] for t in self.sinks)
 
 
-def lower_stages(graph: LogicalGraph, plan: Plan, partition: StagePartition,
-                 mesh=None, stage_meshes: Optional[Sequence] = None
-                 ) -> StagedProgram:
-    """Lower each pipeline stage of ``partition`` independently.
+@dataclasses.dataclass
+class _StageInterface:
+    """Boundary interface of one pipeline stage: which tensors enter and
+    leave it, with their stored (partial-free) signatures."""
 
-    ``mesh`` lowers every stage onto the same device mesh (stages share
-    devices; pipelining overlaps host work and microbatches). Alternatively
-    ``stage_meshes`` gives one mesh per stage — same axis names/sizes but
-    possibly *disjoint* devices, the paper's placement of one stage per device
-    group. Tensors crossing a stage boundary are stored with their
-    :func:`_materialized` (partial-free) signature and boxed on exit.
+    ops: List[LOp]
+    in_tensors: List[LTensor]
+    out_tensors: List[LTensor]
+    in_sbp: Dict[str, NdSbp]
+    out_sbp: Dict[str, NdSbp]
+
+
+def _stage_interfaces(graph: LogicalGraph, plan: Plan,
+                      partition: StagePartition):
+    """Compute every stage's boundary: ``(sinks, boundary_sbp, interfaces)``.
+
+    Shared by forward-only (:func:`lower_stages`) and training
+    (:func:`lower_train_stages`) lowering.
     """
-    if stage_meshes is not None:
-        if len(stage_meshes) != partition.num_stages:
-            raise ValueError(f"need {partition.num_stages} stage meshes, "
-                             f"got {len(stage_meshes)}")
-        meshes = list(stage_meshes)
-    else:
-        if mesh is None:
-            raise ValueError("pass either mesh or stage_meshes")
-        meshes = [mesh] * partition.num_stages
-
     sinks = graph.sinks()
     sink_names = {t.name for t in sinks}
     producer_stage = {t.name: partition.stage_of[t.producer.name]
@@ -370,7 +367,7 @@ def lower_stages(graph: LogicalGraph, plan: Plan, partition: StagePartition,
         if plan.tensor_sbp[t.name].has_partial:
             raise ValueError(f"graph input {t.name} planned as partial-value")
 
-    stages: List[StageProgram] = []
+    interfaces: List[_StageInterface] = []
     for s in range(partition.num_stages):
         ops = partition.ops_in(graph, s)
         in_here = {t.name for op in ops for t in op.inputs}
@@ -388,17 +385,446 @@ def lower_stages(graph: LogicalGraph, plan: Plan, partition: StagePartition,
                               else boundary_sbp[t.name])
         out_tensors = stage_out[s]
         out_sbp = {t.name: boundary_sbp[t.name] for t in out_tensors}
-        mapped = _lower_subgraph(graph, plan, meshes[s], ops,
-                                 in_tensors, out_tensors, in_sbp, out_sbp)
+        interfaces.append(_StageInterface(ops, in_tensors, out_tensors,
+                                          in_sbp, out_sbp))
+    return sinks, boundary_sbp, interfaces
+
+
+def _boundary_shardings(placement, mesh, tensors: Sequence[LTensor],
+                        sbp: Dict[str, NdSbp]) -> Tuple:
+    """NamedShardings for boundary tensors on one stage's mesh — used for
+    the explicit cross-stage transfers when stages own distinct meshes."""
+    return tuple(
+        jax.sharding.NamedSharding(mesh, placement.partition_spec(sbp[t.name]))
+        for t in tensors)
+
+
+def _resolve_meshes(partition: StagePartition, mesh,
+                    stage_meshes: Optional[Sequence]):
+    if stage_meshes is not None:
+        if len(stage_meshes) != partition.num_stages:
+            raise ValueError(f"need {partition.num_stages} stage meshes, "
+                             f"got {len(stage_meshes)}")
+        return list(stage_meshes)
+    if mesh is None:
+        raise ValueError("pass either mesh or stage_meshes")
+    return [mesh] * partition.num_stages
+
+
+def lower_stages(graph: LogicalGraph, plan: Plan, partition: StagePartition,
+                 mesh=None, stage_meshes: Optional[Sequence] = None
+                 ) -> StagedProgram:
+    """Lower each pipeline stage of ``partition`` independently.
+
+    ``mesh`` lowers every stage onto the same device mesh (stages share
+    devices; pipelining overlaps host work and microbatches). Alternatively
+    ``stage_meshes`` gives one mesh per stage — same axis names/sizes but
+    possibly *disjoint* devices, the paper's placement of one stage per device
+    group. Tensors crossing a stage boundary are stored with their
+    :func:`_materialized` (partial-free) signature and boxed on exit.
+    """
+    meshes = _resolve_meshes(partition, mesh, stage_meshes)
+    sinks, boundary_sbp, interfaces = _stage_interfaces(graph, plan, partition)
+
+    stages: List[StageProgram] = []
+    for s, iface in enumerate(interfaces):
+        mapped = _lower_subgraph(graph, plan, meshes[s], iface.ops,
+                                 iface.in_tensors, iface.out_tensors,
+                                 iface.in_sbp, iface.out_sbp)
         in_shardings = None
         if stage_meshes is not None:
-            in_shardings = tuple(
-                jax.sharding.NamedSharding(
-                    meshes[s], graph.placement.partition_spec(in_sbp[t.name]))
-                for t in in_tensors)
+            in_shardings = _boundary_shardings(
+                graph.placement, meshes[s], iface.in_tensors, iface.in_sbp)
         stages.append(StageProgram(
             index=s, fn=jax.jit(mapped),
-            input_names=tuple(t.name for t in in_tensors),
-            output_names=tuple(t.name for t in out_tensors),
+            input_names=tuple(t.name for t in iface.in_tensors),
+            output_names=tuple(t.name for t in iface.out_tensors),
             mesh=meshes[s], in_shardings=in_shardings))
     return StagedProgram(graph, plan, partition, stages, sinks, boundary_sbp)
+
+
+# ---------------------------------------------------------------------------
+# Training lowering (paper §4.3 + the JaxPP-style MPMD fwd/bwd decomposition):
+# each forward stage is differentiated with jax.vjp so residuals/activations
+# stay stage-local (they live inside the returned vjp closure, a pytree the
+# runtime stashes in the forward actor's out register) while cotangents flow
+# backward across stage boundaries. The optimizer update is its own tiny
+# program per stage. The runtime half lives in repro.runtime.pipeline.
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def sgd_update(w, g, lr):
+    """The per-stage optimizer-update program: plain SGD.
+
+    One shared jitted callable so the pipelined step and the monolithic
+    reference (:func:`lower_train_plan`) apply a *bit-identical* update.
+    """
+    return w - lr * g
+
+
+def _zero_cot(v):
+    """Zero cotangent matching ``v``: zeros for inexact dtypes, a float0
+    array for integer outputs (what jax.vjp requires for non-diff outputs)."""
+    import numpy as np
+    v = jnp.asarray(v)
+    if jnp.issubdtype(v.dtype, jnp.inexact):
+        return jnp.zeros_like(v)
+    return np.zeros(v.shape, dtype=jax.dtypes.float0)
+
+
+def split_microbatches(inputs: Dict[str, Any], microbatch_names: Sequence[str],
+                       num_microbatches: int) -> List[Dict[str, Any]]:
+    """Split each named input into ``num_microbatches`` equal chunks along
+    axis 0 — one payload dict per microbatch, in version order.
+
+    Both the actor pipeline and the monolithic reference step chunk with this
+    one helper so their gradient accumulation orders are bit-identical.
+    """
+    import numpy as np
+    for n in microbatch_names:
+        if inputs[n].shape[0] % num_microbatches:
+            raise ValueError(
+                f"input {n} axis 0 ({inputs[n].shape[0]}) not divisible by "
+                f"num_microbatches={num_microbatches}")
+    payloads: List[Dict[str, Any]] = [dict() for _ in range(num_microbatches)]
+    for n in microbatch_names:
+        for k, chunk in enumerate(np.split(np.asarray(inputs[n]),
+                                           num_microbatches, axis=0)):
+            payloads[k][n] = chunk
+    return payloads
+
+
+def _scatter_args(diff_idx: Sequence[int], nondiff_idx: Sequence[int],
+                  n_in: int, diff_vals: Sequence,
+                  nondiff_vals: Sequence) -> List:
+    """Rebuild a positional argument list from its diff/nondiff partition.
+
+    One helper shared by :func:`lower_train_plan` and
+    :func:`lower_train_stages` so the monolithic reference and the pipelined
+    stages assemble ``jax.vjp`` arguments identically — the bit-identity
+    contract depends on these staying in lockstep.
+    """
+    args = [None] * n_in
+    for i, v in zip(diff_idx, diff_vals):
+        args[i] = v
+    for i, v in zip(nondiff_idx, nondiff_vals):
+        args[i] = v
+    return args
+
+
+def _resolve_loss(graph: LogicalGraph, loss) -> LTensor:
+    sinks = graph.sinks()
+    if loss is None:
+        if len(sinks) != 1:
+            raise ValueError(
+                f"graph has {len(sinks)} sinks "
+                f"({[t.name for t in sinks]}); pass loss= explicitly")
+        return sinks[0]
+    name = loss.name if isinstance(loss, LTensor) else loss
+    for t in sinks:
+        if t.name == name:
+            return t
+    raise ValueError(f"loss {name!r} is not a graph sink "
+                     f"(sinks: {[t.name for t in sinks]})")
+
+
+def _resolve_params(graph: LogicalGraph, params) -> List[LTensor]:
+    by_name = {t.name: t for t in graph.inputs}
+    out = []
+    for p in params:
+        name = p.name if isinstance(p, LTensor) else p
+        if name not in by_name:
+            raise ValueError(f"param {name!r} is not a graph input")
+        t = by_name[name]
+        if t.dtype not in ("float32", "bfloat16", "float16"):
+            raise ValueError(f"param {name!r} has non-float dtype {t.dtype}")
+        out.append(t)
+    return out
+
+
+@dataclasses.dataclass
+class TrainStageProgram:
+    """One pipeline stage of a training graph: forward, backward, interface.
+
+    ``fwd(*values)`` takes one value per ``input_names`` entry and returns
+    ``(outputs, vjp)`` — the stage outputs (one per ``output_names``) plus the
+    stage's vjp closure. The closure is a jax pytree (``tree_util.Partial``)
+    holding the stage-local residuals/activations; the actor runtime stashes
+    it in the forward actor's out register so it is recycled exactly when the
+    backward actor acks (the paper's stashed-activation register).
+
+    ``bwd(vjp, cotangents)`` takes that closure plus one cotangent per output
+    (see :meth:`output_cotangents`) and returns one cotangent per
+    ``diff_input_names`` entry: gradients for this stage's params, upstream
+    cotangents for boundary activations from earlier stages. ``bwd`` is None
+    for a stage with no differentiable inputs.
+    """
+
+    index: int
+    fwd: Callable
+    bwd: Optional[Callable]
+    input_names: Tuple[str, ...]
+    output_names: Tuple[str, ...]
+    diff_input_names: Tuple[str, ...]
+    param_names: Tuple[str, ...]
+    mesh: object = None
+    in_shardings: Optional[Tuple] = None
+    cot_shardings: Optional[Dict[str, Any]] = None
+
+    def place_inputs(self, values: Sequence) -> List:
+        """Transfer forward boundary values onto this stage's devices (the
+        explicit cross-stage send; no-op when all stages share one mesh)."""
+        if self.in_shardings is None:
+            return list(values)
+        return [jax.device_put(v, sh)
+                for v, sh in zip(values, self.in_shardings)]
+
+    def output_cotangents(self, outputs: Dict[str, Any],
+                          cotangents: Dict[str, Any],
+                          loss_name: str) -> Tuple:
+        """Assemble the vjp seed for this stage: ones for the loss sink (the
+        objective is the *sum* of the loss tensor over each microbatch),
+        incoming cotangents for outputs consumed downstream, zeros for the
+        rest. Cross-mesh cotangents are transferred onto this stage's
+        devices first (the explicit backward cross-stage send)."""
+        seeds = []
+        for name in self.output_names:
+            if name == loss_name:
+                seeds.append(jnp.ones_like(outputs[name]))
+            elif name in cotangents:
+                v = cotangents[name]
+                if self.cot_shardings is not None and name in self.cot_shardings:
+                    v = jax.device_put(v, self.cot_shardings[name])
+                seeds.append(v)
+            else:
+                seeds.append(_zero_cot(outputs[name]))
+        return tuple(seeds)
+
+
+class TrainStagedProgram:
+    """A training graph cut into forward / backward / optimizer programs.
+
+    Produced by :func:`lower_train_stages`. ``stages[s]`` holds stage s's
+    forward and backward programs; ``opt_update`` is the shared per-tensor
+    optimizer program (:func:`sgd_update`). :meth:`reference_step` is the
+    sequential reference semantics; the concurrent actor-driven execution
+    (1F1B from register quotas) lives in
+    :class:`repro.runtime.pipeline.TrainPipelineExecutor`.
+    """
+
+    def __init__(self, graph: LogicalGraph, plan: Plan,
+                 partition: StagePartition, stages: List[TrainStageProgram],
+                 loss: LTensor, param_names: Tuple[str, ...],
+                 boundary_sbp: Dict[str, NdSbp]):
+        self.graph, self.plan, self.partition = graph, plan, partition
+        self.stages = stages
+        self.loss = loss
+        self.param_names = param_names
+        self.boundary_sbp = boundary_sbp
+        self.opt_update = sgd_update
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def loss_name(self) -> str:
+        return self.loss.name
+
+    @property
+    def input_names(self) -> List[str]:
+        return [t.name for t in self.graph.inputs]
+
+    def stage_of_param(self, name: str) -> int:
+        for st in self.stages:
+            if name in st.param_names:
+                return st.index
+        raise KeyError(name)
+
+    def reference_step(self, inputs: Dict[str, Any],
+                       microbatch_inputs: Sequence[str],
+                       num_microbatches: int, lr: float = 1e-2):
+        """Sequential (non-actor) execution of one training step.
+
+        Runs every microbatch through all forward stages, then all backward
+        stages, accumulating gradients in microbatch order, and applies the
+        optimizer update. Returns ``(loss, grads, new_params)`` with the
+        same bit-exact semantics as the actor pipeline: the objective is the
+        sum of the loss tensor over the whole batch.
+        """
+        chunks = split_microbatches(inputs, microbatch_inputs,
+                                    num_microbatches)
+        mb_names = set(microbatch_inputs)
+        loss_total = None
+        grads: Dict[str, Any] = {}
+        for chunk in chunks:
+            env = {n: (chunk[n] if n in mb_names else inputs[n])
+                   for n in self.input_names}
+            vjps = {}
+            for st in self.stages:
+                args = st.place_inputs([env[n] for n in st.input_names])
+                outs, vjp = st.fwd(*args)
+                env.update(zip(st.output_names, outs))
+                vjps[st.index] = vjp
+            cots: Dict[str, Any] = {}
+            for st in reversed(self.stages):
+                if st.bwd is None:
+                    continue
+                seeds = st.output_cotangents(env, cots, self.loss_name)
+                in_cots = st.bwd(vjps[st.index], seeds)
+                for name, c in zip(st.diff_input_names, in_cots):
+                    if name in st.param_names:
+                        grads[name] = (grads[name] + c if name in grads
+                                       else c)
+                    else:
+                        cots[name] = (cots[name] + c if name in cots else c)
+            ls = jnp.sum(env[self.loss_name])
+            loss_total = ls if loss_total is None else loss_total + ls
+        new_params = {n: self.opt_update(inputs[n], grads[n], lr)
+                      for n in self.param_names}
+        return loss_total, grads, new_params
+
+
+def lower_train_plan(graph: LogicalGraph, plan: Plan, mesh, params,
+                     loss=None) -> Callable:
+    """Monolithic training program — the reference the pipeline is checked
+    against. Returns a jitted ``fn(*graph_input_values) -> (loss_vec, grads)``
+    where ``loss_vec`` is the (unreduced) loss sink and ``grads`` holds
+    ``d(sum(loss_vec))/d(param)`` for each param, in ``params`` order.
+
+    Differentiation seeds ``ones_like(loss_vec)`` exactly like the pipelined
+    backward stages, so per-microbatch gradients are bit-identical to the
+    composed per-stage vjps.
+    """
+    loss_t = _resolve_loss(graph, loss)
+    param_ts = _resolve_params(graph, params)
+    sinks = graph.sinks()
+    for t in sinks:
+        if plan.tensor_sbp[t.name].has_partial:
+            raise ValueError(f"graph output {t.name} planned as partial-value")
+    boundary = {t.name: plan.tensor_sbp[t.name]
+                for t in list(graph.inputs) + sinks}
+    mapped = _lower_subgraph(graph, plan, mesh, graph.topo_ops(),
+                             graph.inputs, sinks, boundary, boundary)
+    loss_pos = [t.name for t in sinks].index(loss_t.name)
+    n_in = len(graph.inputs)
+    diff_idx = [i for i, t in enumerate(graph.inputs)
+                if t.name in {p.name for p in param_ts}]
+    # keep grads in the caller's `params` order, not graph-input order
+    order = {graph.inputs[i].name: j for j, i in enumerate(diff_idx)}
+    perm = [order[p.name] for p in param_ts]
+
+    nondiff_idx = [i for i in range(n_in) if i not in set(diff_idx)]
+
+    def value_and_grad(*all_ins):
+        diff_vals = [all_ins[i] for i in diff_idx]
+        nondiff_vals = [all_ins[i] for i in nondiff_idx]
+
+        def f(*dv):
+            return mapped(*_scatter_args(diff_idx, nondiff_idx, n_in, dv,
+                                         nondiff_vals))[loss_pos]
+
+        loss_vec, vjp = jax.vjp(f, *diff_vals)
+        raw = vjp(jnp.ones_like(loss_vec))
+        return loss_vec, tuple(raw[j] for j in perm)
+
+    return jax.jit(value_and_grad)
+
+
+def lower_train_stages(graph: LogicalGraph, plan: Plan,
+                       partition: StagePartition, params, loss=None,
+                       mesh=None, stage_meshes: Optional[Sequence] = None
+                       ) -> TrainStagedProgram:
+    """Cut a training graph into forward / backward / optimizer programs.
+
+    Builds on :func:`lower_stages`' forward partition: each stage's lowered
+    shard_map program is differentiated with ``jax.vjp`` over its
+    *differentiable* inputs — the stage-local params plus any boundary
+    activations derived from params. Residuals stay inside the per-stage vjp
+    closure (stage-local); only cotangents cross stage boundaries, flowing
+    backward along the same seams the activations flowed forward.
+
+    ``params`` names the graph inputs to be trained; each must be consumed by
+    ops of exactly one stage (pipeline parallelism shards params by stage).
+    ``loss`` names the graph sink to differentiate (default: the sole sink).
+    ``mesh`` / ``stage_meshes`` as in :func:`lower_stages`.
+    """
+    meshes = _resolve_meshes(partition, mesh, stage_meshes)
+    loss_t = _resolve_loss(graph, loss)
+    param_ts = _resolve_params(graph, params)
+    param_names = {t.name for t in param_ts}
+
+    for p in param_ts:
+        stages_using = {partition.stage_of[c.name]
+                        for c in graph.consumers(p)}
+        if len(stages_using) != 1:
+            raise ValueError(
+                f"param {p.name!r} is consumed by stages "
+                f"{sorted(stages_using)}; pipeline training requires each "
+                "param to live on exactly one stage")
+
+    requires_grad = graph.downstream_of(param_names)
+    loss_anc = graph.ancestors(loss_t)
+    for p in param_ts:
+        if p.name not in loss_anc:
+            raise ValueError(
+                f"param {p.name!r} does not feed the loss {loss_t.name!r}; "
+                "its gradient would be identically zero — drop it from "
+                "params or pick the right loss sink")
+
+    def diff(name: str) -> bool:
+        return name in requires_grad and name in loss_anc
+
+    _, boundary_sbp, interfaces = _stage_interfaces(graph, plan, partition)
+
+    stages: List[TrainStageProgram] = []
+    for s, iface in enumerate(interfaces):
+        mapped = _lower_subgraph(graph, plan, meshes[s], iface.ops,
+                                 iface.in_tensors, iface.out_tensors,
+                                 iface.in_sbp, iface.out_sbp)
+        in_names = tuple(t.name for t in iface.in_tensors)
+        n_in = len(in_names)
+        diff_idx = [i for i, t in enumerate(iface.in_tensors)
+                    if diff(t.name)]
+        nondiff_idx = [i for i in range(n_in) if i not in set(diff_idx)]
+        diff_in = tuple(in_names[i] for i in diff_idx)
+        stage_params = tuple(n for n in diff_in if n in param_names)
+
+        if diff_idx:
+            def fwd_py(*ins, _mapped=mapped, _diff=tuple(diff_idx),
+                       _nondiff=tuple(nondiff_idx), _n=n_in):
+                diff_vals = [ins[i] for i in _diff]
+                nondiff_vals = [ins[i] for i in _nondiff]
+
+                def f(*dv):
+                    return _mapped(*_scatter_args(_diff, _nondiff, _n, dv,
+                                                  nondiff_vals))
+
+                return jax.vjp(f, *diff_vals)
+
+            fwd = jax.jit(fwd_py)
+            bwd = jax.jit(lambda vjp, cots: vjp(cots))
+        else:
+            fwd = jax.jit(lambda *ins, _mapped=mapped: (_mapped(*ins), None))
+            bwd = None
+
+        in_shardings = None
+        cot_shardings = None
+        if stage_meshes is not None:
+            in_shardings = _boundary_shardings(
+                graph.placement, meshes[s], iface.in_tensors, iface.in_sbp)
+            cot_shardings = dict(zip(
+                (t.name for t in iface.out_tensors),
+                _boundary_shardings(graph.placement, meshes[s],
+                                    iface.out_tensors, iface.out_sbp)))
+        stages.append(TrainStageProgram(
+            index=s, fwd=fwd, bwd=bwd,
+            input_names=in_names,
+            output_names=tuple(t.name for t in iface.out_tensors),
+            diff_input_names=diff_in, param_names=stage_params,
+            mesh=meshes[s], in_shardings=in_shardings,
+            cot_shardings=cot_shardings))
+
+    all_params = tuple(p.name for p in param_ts)
+    return TrainStagedProgram(graph, plan, partition, stages, loss_t,
+                              all_params, boundary_sbp)

@@ -1,7 +1,9 @@
 from repro.runtime.actor import Actor, ActorSpec, build_actors
 from repro.runtime.messages import Ack, Req, make_actor_id, parse_actor_id
-from repro.runtime.pipeline import (ActorPipelineExecutor, analyze,
+from repro.runtime.pipeline import (ActorPipelineExecutor,
+                                    TrainPipelineExecutor, analyze,
                                     pipeline_specs, plan_registers,
-                                    stage_actor_specs)
+                                    stage_actor_specs,
+                                    train_stage_actor_specs)
 from repro.runtime.scheduler import CommModel, SimResult, Simulator, simulate
 from repro.runtime.threaded import ThreadedRuntime

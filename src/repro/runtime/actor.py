@@ -39,6 +39,7 @@ class ActorSpec:
     max_fires: Optional[int] = None         # e.g. #batches for source actors
     out_nbytes: int = 0                     # for comm cost in sim mode
     wants_version: bool = False             # fn also receives version= kwarg
+    emit_every: int = 1                     # emit output every k-th fire only
 
 
 _reg_counter = itertools.count(1)
@@ -83,6 +84,14 @@ class Actor:
     def exhausted(self) -> bool:
         return self.spec.max_fires is not None and self.fired >= self.spec.max_fires
 
+    @property
+    def emitted_last_fire(self) -> bool:
+        """Whether the most recent fire emitted its output — false for the
+        fires an ``emit_every`` accumulation actor suppressed. Drivers use
+        this for output collection (``reg_id == -1`` can't distinguish
+        'suppressed' from 'no consumers')."""
+        return self.fired % max(1, self.spec.emit_every) == 0
+
     def ready(self) -> bool:
         if self.exhausted or self.out_counter <= 0:
             return False
@@ -108,10 +117,16 @@ class Actor:
             out = self.spec.fn(*ins, version=self.version)
         else:
             out = self.spec.fn(*ins)
+        self.fired += 1
         # allocate an out register instance
         self.out_counter -= 1
         reg_id = next(_reg_counter)
         nrefs = len(self.consumers)
+        # OneFlow-style accumulation actor (`acc`): consumes every firing but
+        # emits only each emit_every-th output (e.g. the summed gradient of a
+        # whole step). Non-emitting fires recycle their register immediately.
+        if not self.emitted_last_fire:
+            nrefs = 0
         if nrefs == 0:
             # no consumer: recycle immediately
             self.out_counter += 1
@@ -120,7 +135,6 @@ class Actor:
             self.reg_payload[reg_id] = out
         in_use = self.spec.out_regs - self.out_counter
         self.peak_regs_in_use = max(self.peak_regs_in_use, in_use)
-        self.fired += 1
         v = self.version
         self.version += 1
         return out, acks, reg_id if nrefs else -1

@@ -14,6 +14,20 @@ acked. Capping the quota at ``R`` bounds in-flight microbatches to ``R``:
 compile-time resource planner: it simulates quotas and picks the smallest one
 within ``tolerance`` of the best makespan — this is the "resource planning at
 compile time" the paper argues for (§2.3), done with the actor model itself.
+
+Two executors then run *real compiled programs* under that protocol:
+
+* :func:`stage_actor_specs` / :class:`ActorPipelineExecutor` — forward-only
+  pipelines over the per-stage jitted programs of
+  :func:`repro.core.lowering.lower_stages` (inference / PR 1).
+* :func:`train_stage_actor_specs` / :class:`TrainPipelineExecutor` — full
+  training pipelines over :func:`repro.core.lowering.lower_train_stages`:
+  forward actors stash their vjp closure (residuals/activations) in the out
+  register that the *backward* actor also references, backward actors flow
+  cotangents up the chain, accumulation actors (``emit_every`` — OneFlow's
+  `acc` op) sum per-microbatch gradients, and optimizer actors fire once per
+  step. The 1F1B schedule is never written down: it emerges from the forward
+  quota ``R[s] = num_stages - s`` alone (§4.3, §6.5).
 """
 from __future__ import annotations
 
@@ -66,6 +80,10 @@ def pipeline_specs(num_stages: int, num_microbatches: int,
 
 @dataclasses.dataclass
 class PipelinePlan:
+    """Result of simulating one register-quota choice: the quota itself, the
+    simulated makespan, per-stage peak activation registers actually used,
+    and the pipeline-bubble fraction (idle time vs the ideal makespan)."""
+
     regs: List[int]
     makespan: float
     peak_activation_regs: Dict[str, int]
@@ -74,6 +92,8 @@ class PipelinePlan:
 
 def analyze(num_stages: int, num_microbatches: int, regs: Sequence[int],
             fwd_time: float = 1.0, bwd_time: float = 2.0) -> PipelinePlan:
+    """Simulate the fwd/bwd pipeline under quota ``regs`` and summarize it
+    as a :class:`PipelinePlan`. Raises if the quota deadlocks the graph."""
     specs = pipeline_specs(num_stages, num_microbatches, fwd_time, bwd_time,
                            list(regs))
     res = simulate(specs, comm=CommModel(same_node=0.0, cross_node_latency=0.0))
@@ -121,6 +141,34 @@ def plan_registers(num_stages: int, num_microbatches: int,
 # overlap *emerges* (§4.3) instead of being scheduled explicitly.
 # ---------------------------------------------------------------------------
 
+def _bind_placed(stage, bound: Dict[str, Any]):
+    """Pre-place the build-time-bound inputs (weights) on the stage's mesh
+    once — they are constant for the whole run, so transferring them per
+    microbatch fire would be pure waste. Returns the placed ``bound`` plus a
+    name->sharding map for per-fire placement of streamed payload entries
+    (both empty no-ops when all stages share one mesh)."""
+    if stage.in_shardings is None:
+        return bound, {}
+    import jax
+
+    shard_of = dict(zip(stage.input_names, stage.in_shardings))
+    return {n: jax.device_put(v, shard_of[n])
+            for n, v in bound.items()}, shard_of
+
+
+def _place_incoming(input_names, bound: Dict[str, Any],
+                    shard_of: Dict[str, Any], payload: Dict[str, Any]):
+    """Assemble a stage's positional inputs: pre-placed bound values as-is,
+    streamed payload entries transferred onto the stage mesh when stages own
+    distinct meshes. Shared by the forward-only and training pipelines."""
+    import jax
+
+    return [bound[n] if n in bound else
+            (jax.device_put(payload[n], shard_of[n]) if n in shard_of
+             else payload[n])
+            for n in input_names]
+
+
 def stage_actor_specs(staged, inputs: Dict[str, Any],
                       microbatch_inputs: Sequence[str],
                       num_microbatches: int,
@@ -140,8 +188,6 @@ def stage_actor_specs(staged, inputs: Dict[str, Any],
     Returns ``(specs, final_stage_name)`` — collect the final stage's outputs
     to reassemble the sinks.
     """
-    import numpy as np
-
     S = staged.num_stages
     if regs is None:
         regs = [max(1, S - s) for s in range(S)]
@@ -154,17 +200,10 @@ def stage_actor_specs(staged, inputs: Dict[str, Any],
     for n in mb_names:
         if n not in staged.input_names:
             raise ValueError(f"{n} is not a graph input")
-        if inputs[n].shape[0] % num_microbatches:
-            raise ValueError(
-                f"input {n} axis 0 ({inputs[n].shape[0]}) not divisible by "
-                f"num_microbatches={num_microbatches}")
 
     # pre-split the streamed inputs: source actor emits payload dict k
-    payloads = [dict() for _ in range(num_microbatches)]
-    for n in mb_names:
-        for k, chunk in enumerate(np.split(np.asarray(inputs[n]),
-                                           num_microbatches, axis=0)):
-            payloads[k][n] = chunk
+    from repro.core.lowering import split_microbatches
+    payloads = split_microbatches(inputs, mb_names, num_microbatches)
 
     # which payload entries each stage must forward to later consumers: any
     # tensor needed by a stage after s still travels the chain at s's output
@@ -183,12 +222,14 @@ def stage_actor_specs(staged, inputs: Dict[str, Any],
         wants_version=True))
 
     def make_stage_fn(stage, bound):
+        bound, shard_of = _bind_placed(stage, bound)
+
         def run_stage(payload):
-            incoming = stage.place_inputs(
-                [bound[n] if n in bound else payload[n]
-                 for n in stage.input_names])
-            outs = stage.fn(*incoming)
             import jax
+
+            incoming = _place_incoming(stage.input_names, bound, shard_of,
+                                       payload)
+            outs = stage.fn(*incoming)
             outs = jax.block_until_ready(outs)
             carried = {n: v for n, v in payload.items()
                        if n in needed_after[stage.index + 1] or n in sink_names}
@@ -258,10 +299,7 @@ class ActorPipelineExecutor:
         # input are per-chunk slices -> concatenate along the batch axis;
         # anything else (e.g. a weights-only sink) is recomputed identically
         # every firing -> take one copy.
-        mb_dependent = set(self.microbatch_inputs)
-        for op in self.staged.graph.topo_ops():
-            if any(t.name in mb_dependent for t in op.inputs):
-                mb_dependent.add(op.output.name)
+        mb_dependent = self.staged.graph.downstream_of(self.microbatch_inputs)
         results = []
         for t in self.staged.sinks:
             if t.name in mb_dependent:
@@ -270,3 +308,270 @@ class ActorPipelineExecutor:
             else:
                 results.append(np.asarray(outs[0][t.name]))
         return tuple(results)
+
+
+# ---------------------------------------------------------------------------
+# Training pipelines: backward + optimizer actors (the tentpole of PR 2).
+#
+# One microbatch's journey: data -> f0 -> f1 -> ... -> f{S-1} -> b{S-1} ->
+# ... -> b0, with acc{s} summing each stage's per-microbatch gradients
+# (OneFlow's `acc` op, via ActorSpec.emit_every) and opt{s} firing exactly
+# once per step on the summed gradient. Stage s's forward out register holds
+# BOTH the boundary activations for f{s+1} AND the vjp closure (residuals)
+# for b{s}; it is recycled only when both have acked — capping that quota at
+# R[s] = S - s is all it takes for the 1F1B schedule to emerge.
+# ---------------------------------------------------------------------------
+
+_VJP_KEY = "__vjp__"
+
+
+def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
+                            microbatch_inputs: Sequence[str],
+                            num_microbatches: int, lr: float = 1e-2,
+                            regs: Optional[Sequence[int]] = None,
+                            fn_wrap: Optional[Callable] = None,
+                            ) -> Tuple[List[ActorSpec], List[str]]:
+    """Build the fwd/bwd/opt actor graph executing one training step.
+
+    ``tstaged`` is a :class:`repro.core.lowering.TrainStagedProgram`.
+    ``inputs`` maps every graph-input name (params included) to its value;
+    names in ``microbatch_inputs`` are split into ``num_microbatches`` chunks
+    along axis 0 and streamed by the source actor, everything else is bound
+    at build time. ``regs[s]`` is forward stage s's out-register quota
+    (default 1F1B, ``num_stages - s``); backward/acc/opt actors need no
+    tuning. ``fn_wrap(kind, stage_index, fn)`` with kind in
+    ``{"fwd", "bwd"}`` optionally decorates the stage bodies (benchmarks use
+    it to emulate device latency).
+
+    Returns ``(specs, collect_names)``: ``collect_names[0]`` is the backward
+    actor of the loss-producing stage (the per-microbatch loss stream), the
+    rest are the ``opt{s}`` actors (each stage's summed gradients and
+    updated params).
+    """
+    import jax
+
+    from repro.core.lowering import split_microbatches
+
+    S = tstaged.num_stages
+    if regs is None:
+        regs = [max(1, S - s) for s in range(S)]
+    if len(regs) != S:
+        raise ValueError(f"need {S} register quotas, got {len(regs)}")
+    missing = [n for n in tstaged.input_names if n not in inputs]
+    if missing:
+        raise ValueError(f"missing graph inputs: {missing}")
+    mb_names = list(microbatch_inputs)
+    for n in mb_names:
+        if n not in tstaged.input_names:
+            raise ValueError(f"{n} is not a graph input")
+    payloads = split_microbatches(inputs, mb_names, num_microbatches)
+
+    graph_inputs = set(tstaged.input_names)
+    loss_name = tstaged.loss_name
+
+    # forward carry: tensors a stage must forward for later stages' use
+    needed_after: List[set] = [set() for _ in range(S + 1)]
+    for s in reversed(range(S)):
+        payload_borne = {n for n in tstaged.stages[s].input_names
+                         if n in mb_names or n not in graph_inputs}
+        needed_after[s] = needed_after[s + 1] | payload_borne
+
+    # backward carry: which cotangents b{s} must emit to b{s-1}. A boundary
+    # activation produced at stage p collects contributions from every
+    # consuming stage >= s on the way down and is consumed as b{p}'s seed.
+    produced_at = {n: st.index for st in tstaged.stages
+                   for n in st.output_names}
+    # the loss stream is collected at the backward actor of the stage that
+    # produces the loss sink (usually, but not necessarily, the last stage)
+    loss_stage = produced_at[loss_name]
+    diff_boundary = {n for st in tstaged.stages
+                     for n in st.diff_input_names if n not in st.param_names}
+    out_cot_names: List[set] = [set() for _ in range(S)]
+    for n in diff_boundary:
+        consumers = {st.index for st in tstaged.stages
+                     if n in st.diff_input_names}
+        for s in range(produced_at[n] + 1, S):
+            if any(c >= s for c in consumers):
+                out_cot_names[s].add(n)
+
+    specs: List[ActorSpec] = []
+    specs.append(ActorSpec(
+        name="data", fn=lambda version: payloads[version], inputs=(),
+        out_regs=2, node=0, thread=0, max_fires=num_microbatches,
+        wants_version=True))
+
+    def make_fwd_fn(stage, bound):
+        bound, shard_of = _bind_placed(stage, bound)
+
+        def run_fwd(payload):
+            incoming = _place_incoming(stage.input_names, bound, shard_of,
+                                       payload)
+            outs, vjp = stage.fwd(*incoming)
+            outs = jax.block_until_ready(outs)
+            carried = {n: v for n, v in payload.items()
+                       if n in needed_after[stage.index + 1]}
+            carried.update(zip(stage.output_names, outs))
+            carried[_VJP_KEY] = vjp
+            return carried
+        return run_fwd
+
+    def make_bwd_fn(stage):
+        def run_bwd(f_payload, b_payload=None):
+            incoming = {} if b_payload is None else b_payload["cots"]
+            grads, contrib = {}, {}
+            if stage.bwd is not None:
+                seeds = stage.output_cotangents(f_payload, incoming,
+                                                loss_name)
+                in_cots = stage.bwd(f_payload[_VJP_KEY], seeds)
+                in_cots = jax.block_until_ready(in_cots)
+                for n, c in zip(stage.diff_input_names, in_cots):
+                    if n in stage.param_names:
+                        grads[n] = c
+                    else:
+                        contrib[n] = c
+            out_cots = {}
+            for n in out_cot_names[stage.index]:
+                c = incoming.get(n)
+                if n in contrib:
+                    c = contrib[n] if c is None else c + contrib[n]
+                out_cots[n] = c
+            out = {"cots": out_cots, "grads": grads}
+            if stage.index == loss_stage:
+                out["loss"] = f_payload[loss_name]
+            return out
+        return run_bwd
+
+    def make_acc_fn():
+        state: Dict[str, Any] = {}
+
+        def run_acc(b_payload):
+            for n, g in b_payload["grads"].items():
+                state[n] = state[n] + g if n in state else g
+            return dict(state)
+        return run_acc
+
+    def make_opt_fn(stage, bound_params):
+        def run_opt(grads):
+            new = {n: tstaged.opt_update(bound_params[n], grads[n], lr)
+                   for n in stage.param_names}
+            new = jax.block_until_ready(new)
+            return {"params": new, "grads": grads}
+        return run_opt
+
+    collect = []
+    for s, stage in enumerate(tstaged.stages):
+        bound = {n: inputs[n] for n in stage.input_names
+                 if n in graph_inputs and n not in mb_names}
+        fwd_fn = make_fwd_fn(stage, bound)
+        bwd_fn = make_bwd_fn(stage)
+        if fn_wrap is not None:
+            fwd_fn = fn_wrap("fwd", s, fwd_fn)
+            bwd_fn = fn_wrap("bwd", s, bwd_fn)
+        specs.append(ActorSpec(
+            name=f"f{s}", fn=fwd_fn,
+            inputs=("data",) if s == 0 else (f"f{s-1}",),
+            out_regs=max(1, regs[s]), node=0, thread=s + 1,
+            max_fires=num_microbatches))
+        specs.append(ActorSpec(
+            name=f"b{s}", fn=bwd_fn,
+            inputs=(f"f{s}",) if s == S - 1 else (f"f{s}", f"b{s+1}"),
+            out_regs=2, node=0, thread=s + 1,
+            max_fires=num_microbatches))
+        if stage.param_names:
+            specs.append(ActorSpec(
+                name=f"acc{s}", fn=make_acc_fn(), inputs=(f"b{s}",),
+                out_regs=1, node=0, thread=s + 1,
+                max_fires=num_microbatches, emit_every=num_microbatches))
+            specs.append(ActorSpec(
+                name=f"opt{s}", fn=make_opt_fn(stage, bound),
+                inputs=(f"acc{s}",), out_regs=1, node=0, thread=s + 1,
+                max_fires=1))
+            collect.append(f"opt{s}")
+    collect.insert(0, f"b{loss_stage}")
+    return specs, collect
+
+
+class TrainPipelineExecutor:
+    """Run a :class:`TrainStagedProgram` as a 1F1B training pipeline.
+
+    Holds the current params; each :meth:`step` builds a fresh fwd/bwd/opt
+    actor graph (actors are single-use state machines), streams the
+    microbatches through it, and applies the optimizer update — returning
+    ``(loss, grads, params)`` bit-identical to the monolithic reference
+    (:func:`repro.core.lowering.lower_train_plan` accumulated in microbatch
+    order; the objective is the *sum* of the loss tensor over the batch).
+
+    Instrumentation mirrors :class:`ActorPipelineExecutor`:
+    ``last_makespan`` (wall-clock seconds), ``last_history`` (per-actor
+    action intervals), ``last_peak_regs`` (per-actor peak out-registers in
+    use — ``f{s}`` entries are the in-flight activation counts the 1F1B
+    quota bounds).
+    """
+
+    def __init__(self, tstaged, params: Dict[str, Any],
+                 microbatch_inputs: Sequence[str], num_microbatches: int,
+                 lr: float = 1e-2, regs: Optional[Sequence[int]] = None,
+                 fn_wrap: Optional[Callable] = None):
+        missing = [n for n in tstaged.param_names if n not in params]
+        if missing:
+            raise ValueError(f"missing params: {missing}")
+        self.tstaged = tstaged
+        self.params = {n: params[n] for n in tstaged.param_names}
+        self.microbatch_inputs = list(microbatch_inputs)
+        self.num_microbatches = num_microbatches
+        self.lr = lr
+        self.regs = regs
+        self.fn_wrap = fn_wrap
+        self.last_makespan: Optional[float] = None
+        self.last_history: Dict[str, List[Tuple[float, float]]] = {}
+        self.last_peak_regs: Dict[str, int] = {}
+
+    @property
+    def peak_inflight_activations(self) -> int:
+        """Peak forward registers in use across stages in the last step —
+        the in-flight microbatch count the quota back-pressures."""
+        return max(self.last_peak_regs.get(f"f{s}", 0)
+                   for s in range(self.tstaged.num_stages))
+
+    def step(self, data_inputs: Dict[str, Any], timeout: float = 300.0):
+        """Run one training step over the current params.
+
+        ``data_inputs`` maps non-param graph inputs to values (the
+        microbatched ones are split along axis 0). Updates ``self.params``
+        in place and returns ``(loss, grads, params)``.
+        """
+        import jax.numpy as jnp
+
+        inputs = dict(data_inputs)
+        inputs.update(self.params)
+        specs, collect = train_stage_actor_specs(
+            self.tstaged, inputs, self.microbatch_inputs,
+            self.num_microbatches, lr=self.lr, regs=self.regs,
+            fn_wrap=self.fn_wrap)
+        rt = ThreadedRuntime(specs, collect_outputs_of=collect)
+        t0 = time.perf_counter()
+        outs = rt.run(timeout=timeout)
+        self.last_makespan = time.perf_counter() - t0
+        self.last_history = {name: list(a.history)
+                             for name, a in rt.by_name.items()}
+        self.last_peak_regs = {name: a.peak_regs_in_use
+                               for name, a in rt.by_name.items()}
+
+        # the loss-bearing backward actor fires in version order on one
+        # thread, so the collected loss stream is microbatch-ordered
+        loss_payloads = outs[collect[0]]
+        if len(loss_payloads) != self.num_microbatches:
+            raise RuntimeError(
+                f"collected {len(loss_payloads)} loss chunks, expected "
+                f"{self.num_microbatches}")
+        loss = None
+        for pl in loss_payloads:
+            ls = jnp.sum(pl["loss"])
+            loss = ls if loss is None else loss + ls
+
+        grads: Dict[str, Any] = {}
+        for name in collect[1:]:
+            (opt_out,) = outs[name]        # optimizer fired exactly once
+            grads.update(opt_out["grads"])
+            self.params.update(opt_out["params"])
+        return loss, grads, dict(self.params)

@@ -87,7 +87,7 @@ class Simulator:
         out, acks, reg_id = actor.fire()
         version = actor.version - 1
         actor.history.append((start, end))
-        if self.collect == actor.spec.name:
+        if self.collect == actor.spec.name and actor.emitted_last_fire:
             self.outputs.append(out)
         self._push(end, "action_end",
                    (actor.spec.name, out, acks, reg_id, version))

@@ -20,11 +20,25 @@ from repro.runtime.messages import Ack, Req, thread_of, node_of
 
 
 class ThreadedRuntime:
+    """Drive a graph of :class:`ActorSpec`s on OS threads.
+
+    ``collect_outputs_of`` names the actor(s) whose outputs :meth:`run`
+    returns: a single name yields a flat list (fire order), a sequence of
+    names yields ``{name: [outputs...]}`` — the training pipeline collects
+    the loss stream and every optimizer actor at once.
+    """
+
     def __init__(self, specs: Sequence[ActorSpec],
-                 collect_outputs_of: Optional[str] = None):
+                 collect_outputs_of=None):
         self.by_name, self.by_id = build_actors(specs)
-        self.collect = collect_outputs_of
+        self._collect_single = (collect_outputs_of is None
+                                or isinstance(collect_outputs_of, str))
+        names = ([collect_outputs_of] if self._collect_single else
+                 list(collect_outputs_of))
+        self._collect_names = {n for n in names if n is not None}
         self.outputs: List[Any] = []
+        self.outputs_by_name: Dict[str, List[Any]] = {
+            n: [] for n in self._collect_names}
         self._outputs_lock = threading.Lock()
         # one mailbox + worker per (node, thread)
         keys = sorted({(s.node, s.thread) for s in (a.spec for a in self.by_name.values())})
@@ -56,9 +70,14 @@ class ThreadedRuntime:
                     # pipeline overlap can be observed on real threads too
                     actor.history.append((start, time.perf_counter() - self._t0))
                     version = actor.version - 1
-                    if self.collect == actor.spec.name:
+                    # collect only fires the protocol emitted (emit_every
+                    # suppresses all but each k-th output of an acc actor)
+                    if (actor.spec.name in self._collect_names
+                            and actor.emitted_last_fire):
                         with self._outputs_lock:
-                            self.outputs.append(out)
+                            self.outputs_by_name[actor.spec.name].append(out)
+                            if self._collect_single:
+                                self.outputs.append(out)
                     for ack in acks:
                         self._post(ack)
                     if reg_id != -1:
@@ -87,8 +106,12 @@ class ThreadedRuntime:
             self._errors.append(e)
             self._done.set()
 
-    def run(self, timeout: float = 120.0) -> List[Any]:
-        """Run until every bounded actor has exhausted its fires."""
+    def run(self, timeout: float = 120.0):
+        """Run until every bounded actor has exhausted its fires.
+
+        Returns the collected outputs: a flat list when a single actor name
+        was given, else ``{name: [outputs...]}``.
+        """
         bounded = [a for a in self.by_name.values() if a.spec.max_fires is not None]
         if not bounded:
             raise ValueError("threaded runtime needs at least one bounded actor")
@@ -115,4 +138,4 @@ class ThreadedRuntime:
                 "threaded actor runtime did not complete: "
                 + ", ".join(f"{a.spec.name}={a.fired}/{a.spec.max_fires}"
                             for a in bounded if not a.exhausted))
-        return self.outputs
+        return self.outputs if self._collect_single else self.outputs_by_name

@@ -318,3 +318,113 @@ def make_serve_step(cfg: ModelConfig, mesh, cache_len: int,
 
     return ServeStep(prefill_fn, decode_fn, init_caches_fn, pspecs, cspecs,
                      bspecs, plan)
+
+
+# ---------------------------------------------------------------------------
+# LogicalGraph training steps (paper §4.3): monolithic reference vs 1F1B
+# pipeline. Both chunk the batch with the same helper and accumulate in
+# microbatch order, so their losses/gradients/updates are bit-identical —
+# the pipeline changes the *schedule*, never the numerics.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GraphTrainStep:
+    """Monolithic microbatched SPMD training step over a ``LogicalGraph``.
+
+    ``step_fn(param_values, data) -> (loss, grads, new_params)``: runs every
+    microbatch through one whole-graph jitted value-and-grad program,
+    accumulates, and applies :func:`repro.core.lowering.sgd_update`. The
+    objective is the sum of the loss sink over the whole batch. This is the
+    reference :func:`make_pipeline_train_step` is checked against.
+    """
+
+    step_fn: Any
+    param_names: Tuple[str, ...]
+    num_microbatches: int
+    lr: float
+
+    def step(self, param_values: Dict[str, Any], data: Dict[str, Any]):
+        return self.step_fn(param_values, data)
+
+
+def make_graph_train_step(graph, mesh, params, microbatch_inputs,
+                          num_microbatches: int, lr: float = 1e-2,
+                          loss=None, graph_plan=None) -> GraphTrainStep:
+    """Build the monolithic (non-pipelined) training step for ``graph``.
+
+    ``params`` names the graph inputs to train; ``microbatch_inputs`` names
+    the inputs split along axis 0 into ``num_microbatches`` chunks. The SBP
+    plan is computed with :func:`repro.core.planner.plan` unless
+    ``graph_plan`` is given.
+    """
+    from repro.core.lowering import (lower_train_plan, sgd_update,
+                                     split_microbatches)
+    from repro.core.planner import plan as plan_sbp
+
+    p = graph_plan if graph_plan is not None else plan_sbp(graph)
+    vg = lower_train_plan(graph, p, mesh, params, loss=loss)
+    param_names = tuple(getattr(t, "name", t) for t in params)
+    input_names = [t.name for t in graph.inputs]
+    mb_names = list(microbatch_inputs)
+    mb = set(mb_names)
+
+    def step_fn(param_values: Dict[str, Any], data: Dict[str, Any]):
+        chunks = split_microbatches(data, mb_names, num_microbatches)
+        loss_total, grads = None, None
+        for chunk in chunks:
+            vals = [chunk[n] if n in mb
+                    else (param_values[n] if n in param_values else data[n])
+                    for n in input_names]
+            loss_vec, g = vg(*vals)
+            ls = jnp.sum(loss_vec)
+            loss_total = ls if loss_total is None else loss_total + ls
+            grads = (list(g) if grads is None
+                     else [a + b for a, b in zip(grads, g)])
+        gdict = dict(zip(param_names, grads))
+        new_params = {n: sgd_update(param_values[n], gdict[n], lr)
+                      for n in param_names}
+        return loss_total, gdict, new_params
+
+    return GraphTrainStep(step_fn=step_fn, param_names=param_names,
+                          num_microbatches=num_microbatches, lr=lr)
+
+
+def make_pipeline_train_step(graph, init_params: Dict[str, Any],
+                             microbatch_inputs, num_microbatches: int,
+                             num_stages: Optional[int] = None, mesh=None,
+                             stage_meshes=None, lr: float = 1e-2,
+                             regs=None, loss=None, graph_plan=None,
+                             fn_wrap=None):
+    """Build the 1F1B pipelined alternative to :func:`make_graph_train_step`.
+
+    Cuts ``graph`` into stages (user ``graph.stage(k)`` annotations, or
+    cost-balanced into ``num_stages``), lowers forward/backward/optimizer
+    programs per stage (:func:`repro.core.lowering.lower_train_stages`), and
+    returns a :class:`repro.runtime.pipeline.TrainPipelineExecutor` whose
+    ``step(data)`` streams the microbatches through stage actors — gradient,
+    loss, and updated params bit-identical to the monolithic step, with the
+    1F1B schedule emerging from the forward register quotas (``regs``,
+    default ``num_stages - s``).
+
+    ``init_params`` maps each trainable graph input to its initial value;
+    the executor owns the params from then on.
+    """
+    from repro.core.graph import partition_stages
+    from repro.core.lowering import lower_train_stages
+    from repro.core.planner import plan as plan_sbp
+    from repro.runtime.pipeline import TrainPipelineExecutor
+
+    p = graph_plan if graph_plan is not None else plan_sbp(graph)
+    # partition_stages validates num_stages against annotations when both
+    # are present, and requires it when the graph is unannotated
+    partition = partition_stages(graph, num_stages)
+    param_names = [t.name for t in graph.inputs if t.name in init_params]
+    if len(param_names) != len(init_params):
+        extra = set(init_params) - set(param_names)
+        raise ValueError(f"init_params entries are not graph inputs: "
+                         f"{sorted(extra)}")
+    tstaged = lower_train_stages(graph, p, partition, param_names, loss=loss,
+                                 mesh=mesh, stage_meshes=stage_meshes)
+    return TrainPipelineExecutor(tstaged, init_params, microbatch_inputs,
+                                 num_microbatches, lr=lr, regs=regs,
+                                 fn_wrap=fn_wrap)

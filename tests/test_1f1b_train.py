@@ -1,0 +1,345 @@
+"""1F1B training pipeline tests (paper §4.3/§6.5 for fwd+bwd+optimizer).
+
+The acceptance criteria of the training tentpole, pinned down:
+
+(a) pipelined gradients/losses/updated params are *bit-identical* to the
+    monolithic SPMD ``make_graph_train_step`` over multiple steps;
+(b) peak in-flight microbatches (forward registers in use) never exceed the
+    register quota — serialized at R=1, 1F1B at R=S-s;
+(c) optimizer actors fire exactly once per step (the accumulation actor
+    consumes the per-microbatch gradient stream and emits once).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.graph import LogicalGraph, partition_stages
+from repro.core.lowering import lower_train_stages, split_microbatches
+from repro.core.placement import Placement
+from repro.core.planner import plan
+from repro.runtime import ActorSpec, ThreadedRuntime
+from repro.train.steps import make_graph_train_step, make_pipeline_train_step
+
+B, W, DEPTH = 16, 32, 4
+
+
+def _train_graph(depth=DEPTH, batch=B, width=W):
+    """MLP + softmax cross-entropy: the loss sink is the only sink."""
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (batch, width))
+    labels = g.input("labels", (batch,), dtype="int32")
+    for i in range(depth):
+        w = g.input(f"w{i}", (width, width))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < depth - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+    return g
+
+
+def _params_and_data(g, seed=0, n_classes=None):
+    rng = np.random.default_rng(seed)
+    params, data = {}, {}
+    for t in g.inputs:
+        if t.name.startswith("w"):
+            params[t.name] = (rng.normal(size=t.shape) * 0.1).astype(np.float32)
+        elif t.dtype == "int32":
+            hi = n_classes if n_classes is not None else W
+            data[t.name] = rng.integers(0, hi, size=t.shape).astype(np.int32)
+        else:
+            data[t.name] = rng.normal(size=t.shape).astype(np.float32)
+    return params, data
+
+
+class TestBitIdentical:
+    def test_pipeline_matches_monolithic_over_three_steps(self):
+        """Criterion (a): same losses, gradients, and params, bitwise, for
+        three consecutive optimizer steps."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
+                                     num_microbatches=4)
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=4, num_stages=4,
+                                        mesh=mesh)
+        mono_params = dict(params)
+        for step in range(3):
+            ml, mg, mono_params = mono.step(mono_params, data)
+            pl, pg, pipe_params = pipe.step(data)
+            assert bool(ml == pl), f"loss diverged at step {step}"
+            for n in params:
+                assert bool(jnp.all(mg[n] == pg[n])), \
+                    f"grad {n} diverged at step {step}"
+                assert bool(jnp.all(mono_params[n] == pipe_params[n])), \
+                    f"param {n} diverged at step {step}"
+
+    def test_reference_step_matches_monolithic(self):
+        """The sequential (non-actor) reference semantics of the staged
+        training program agree bitwise with the monolithic step."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        p = plan(g)
+        part = partition_stages(g, num_stages=4)
+        ts = lower_train_stages(g, p, part, list(params), mesh=mesh)
+        rl, rg, rnew = ts.reference_step({**params, **data}, ["x", "labels"],
+                                         num_microbatches=4)
+        mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
+                                     num_microbatches=4)
+        ml, mg, mnew = mono.step(dict(params), data)
+        assert bool(rl == ml)
+        for n in params:
+            assert bool(jnp.all(rg[n] == mg[n]))
+            assert bool(jnp.all(rnew[n] == mnew[n]))
+
+    def test_skip_connection_across_stages(self):
+        """A boundary activation consumed two stages downstream: its
+        cotangent rides the backward chain and sums contributions from both
+        consumers."""
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (8, 16))
+        labels = g.input("labels", (8,), dtype="int32")
+        w0 = g.input("w0", (16, 16))
+        w1 = g.input("w1", (16, 16))
+        w2 = g.input("w2", (16, 16))
+        with g.stage(0):
+            h0 = g.unary(g.matmul(x, w0, name="mm0"), "relu", name="relu0")
+        with g.stage(1):
+            h1 = g.unary(g.matmul(h0, w1, name="mm1"), "relu", name="relu1")
+        with g.stage(2):
+            h2 = g.matmul(h1, w2, name="mm2")
+            s = g.add(h2, h0, name="skip")       # h0 consumed at stage 2 too
+            g.softmax_xent(s, labels, name="loss")
+        params, data = _params_and_data(g, n_classes=16)
+        mesh = g.placement.to_mesh()
+        mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
+                                     num_microbatches=2)
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=2, mesh=mesh)
+        ml, mg, _ = mono.step(dict(params), data)
+        pl, pg, _ = pipe.step(data)
+        np.testing.assert_allclose(float(pl), float(ml), rtol=1e-6)
+        for n in params:
+            np.testing.assert_allclose(np.asarray(pg[n]), np.asarray(mg[n]),
+                                       rtol=1e-5, atol=1e-6)
+
+
+class TestMidGraphLoss:
+    def test_loss_produced_before_last_stage(self):
+        """The loss sink need not live on the last stage: the loss stream is
+        collected at its producing stage's backward actor, and later stages
+        (here a non-trained metric head) contribute zero cotangents."""
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (8, 16))
+        labels = g.input("labels", (8,), dtype="int32")
+        w0 = g.input("w0", (16, 16))
+        w_m = g.input("w_m", (16, 16))           # metric head, not trained
+        with g.stage(0):
+            h = g.matmul(x, w0, name="mm0")
+            g.softmax_xent(h, labels, name="loss")
+        with g.stage(1):
+            g.unary(g.matmul(h, w_m, name="mm_m"), "tanh", name="metric")
+        data = {"x": np.random.default_rng(0).normal(size=(8, 16))
+                .astype(np.float32),
+                "labels": np.random.default_rng(1).integers(0, 16, size=(8,))
+                .astype(np.int32),
+                "w_m": np.random.default_rng(2).normal(size=(16, 16))
+                .astype(np.float32)}
+        params = {"w0": (np.random.default_rng(3).normal(size=(16, 16)) * 0.1)
+                  .astype(np.float32)}
+        mesh = g.placement.to_mesh()
+        mono = make_graph_train_step(g, mesh, ["w0"], ["x", "labels"],
+                                     num_microbatches=2, loss="loss.out")
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=2, mesh=mesh,
+                                        loss="loss.out")
+        ml, mg, _ = mono.step(dict(params), data)
+        pl, pg, _ = pipe.step(data)
+        assert bool(ml == pl)
+        assert bool(jnp.all(mg["w0"] == pg["w0"]))
+
+
+class TestRegisterQuota:
+    def test_peak_inflight_never_exceeds_quota(self):
+        """Criterion (b): forward registers in use are bounded by the quota
+        for serialized (R=1), partial (R=2), and 1F1B (R=S-s) settings."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        S, M = 4, 8
+        for regs in ([1] * S, [2] * S, [S - s for s in range(S)]):
+            pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                            num_microbatches=M, num_stages=S,
+                                            mesh=mesh, regs=regs)
+            pipe.step(data)
+            for s in range(S):
+                assert pipe.last_peak_regs[f"f{s}"] <= regs[s]
+            assert pipe.peak_inflight_activations <= max(regs)
+
+    def test_serialized_quota_still_bit_identical(self):
+        """R=1 fully serializes but must not change the numbers."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
+                                     num_microbatches=4)
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=4, num_stages=4,
+                                        mesh=mesh, regs=[1] * 4)
+        ml, mg, _ = mono.step(dict(params), data)
+        pl, pg, _ = pipe.step(data)
+        assert bool(ml == pl)
+        for n in params:
+            assert bool(jnp.all(mg[n] == pg[n]))
+
+
+class TestOptimizerActors:
+    def test_optimizer_fires_exactly_once_per_step(self):
+        """Criterion (c): each opt actor fires once; each backward and acc
+        actor fires once per microbatch."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        M, S = 8, 4
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=M, num_stages=S,
+                                        mesh=mesh)
+        for _ in range(2):                       # per *step*, not just once
+            pipe.step(data)
+            for s in range(S):
+                assert len(pipe.last_history[f"b{s}"]) == M
+                if f"acc{s}" in pipe.last_history:
+                    assert len(pipe.last_history[f"acc{s}"]) == M
+                    assert len(pipe.last_history[f"opt{s}"]) == 1
+
+    def test_emit_every_accumulation_actor(self):
+        """ActorSpec.emit_every (OneFlow's acc op): consumes every firing,
+        emits only each k-th output; the consumer fires once."""
+        got = []
+        specs = [
+            ActorSpec("src", fn=lambda version: version + 1, inputs=(),
+                      out_regs=2, max_fires=6, thread=0, wants_version=True),
+            ActorSpec("acc", fn=_make_summer(), inputs=("src",), out_regs=1,
+                      max_fires=6, thread=1, emit_every=6),
+            ActorSpec("sink", fn=lambda total: got.append(total) or total,
+                      inputs=("acc",), out_regs=1, max_fires=1, thread=2),
+        ]
+        rt = ThreadedRuntime(specs, collect_outputs_of="sink")
+        outs = rt.run(timeout=10.0)
+        assert outs == [21] and got == [21]      # 1+2+...+6
+        assert rt.by_name["acc"].fired == 6
+        assert rt.by_name["sink"].fired == 1
+        assert not rt.by_name["acc"].refcount    # register recycled
+
+    def test_suppressed_emits_are_not_collected(self):
+        """Collecting an emit_every actor directly yields only the outputs
+        the protocol actually emitted, not every fire's partial sum."""
+        specs = [
+            ActorSpec("src", fn=lambda version: version + 1, inputs=(),
+                      out_regs=2, max_fires=6, thread=0, wants_version=True),
+            ActorSpec("acc", fn=_make_summer(), inputs=("src",), out_regs=1,
+                      max_fires=6, thread=1, emit_every=3),
+        ]
+        rt = ThreadedRuntime(specs, collect_outputs_of="acc")
+        outs = rt.run(timeout=10.0)
+        assert outs == [6, 21]                   # fires 3 and 6 only
+
+    def test_annotated_graph_with_mismatched_num_stages_rejected(self):
+        """An explicit num_stages must still be validated against stage
+        annotations instead of being silently ignored."""
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (8, 16))
+        w0 = g.input("w0", (16, 16))
+        with g.stage(0):
+            h = g.matmul(x, w0, name="mm0")
+        with g.stage(1):
+            g.reduce(g.unary(h, "tanh", name="t"), axis=1, name="loss")
+        with pytest.raises(ValueError, match="annotations span"):
+            make_pipeline_train_step(g, {"w0": np.zeros((16, 16), np.float32)},
+                                     ["x"], num_microbatches=2, num_stages=4,
+                                     mesh=placement.to_mesh())
+
+    def test_multi_actor_collection(self):
+        """ThreadedRuntime collects from several actors at once, keyed by
+        name (the training executor needs loss + every opt actor)."""
+        specs = [
+            ActorSpec("a", fn=lambda version: ("a", version), inputs=(),
+                      out_regs=2, max_fires=3, thread=0, wants_version=True),
+            ActorSpec("b", fn=lambda v: ("b", v[1]), inputs=("a",),
+                      out_regs=2, max_fires=3, thread=1),
+        ]
+        rt = ThreadedRuntime(specs, collect_outputs_of=["a", "b"])
+        outs = rt.run(timeout=10.0)
+        assert set(outs) == {"a", "b"}
+        assert [v for _, v in outs["a"]] == [0, 1, 2]
+        assert [v for _, v in outs["b"]] == [0, 1, 2]
+
+
+def _make_summer():
+    state = {"total": 0}
+
+    def run(x):
+        state["total"] += x
+        return state["total"]
+    return run
+
+
+class TestTrainLoweringValidation:
+    def test_param_spanning_stages_rejected(self):
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (8, 16))
+        w = g.input("w", (16, 16))
+        with g.stage(0):
+            h = g.matmul(x, w, name="mm0")
+        with g.stage(1):
+            g.matmul(h, w, name="mm1")           # same param, second stage
+        p = plan(g)
+        part = partition_stages(g)
+        with pytest.raises(ValueError, match="exactly one stage"):
+            lower_train_stages(g, p, part, ["w"], mesh=placement.to_mesh())
+
+    def test_loss_must_be_a_sink(self):
+        g = _train_graph()
+        p = plan(g)
+        part = partition_stages(g, num_stages=2)
+        with pytest.raises(ValueError, match="not a graph sink"):
+            lower_train_stages(g, p, part, ["w0"], loss="mm0.out",
+                               mesh=g.placement.to_mesh())
+
+    def test_param_not_feeding_loss_rejected(self):
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (8, 16))
+        labels = g.input("labels", (8,), dtype="int32")
+        w0 = g.input("w0", (16, 16))
+        w_dead = g.input("w_dead", (16, 16))
+        with g.stage(0):
+            h = g.matmul(x, w0, name="mm0")
+            g.unary(g.matmul(x, w_dead, name="mm_dead"), "tanh",
+                    name="metric")                # sink, not the loss
+        with g.stage(1):
+            g.softmax_xent(h, labels, name="loss")
+        p = plan(g)
+        part = partition_stages(g)
+        with pytest.raises(ValueError, match="does not feed the loss"):
+            lower_train_stages(g, p, part, ["w0", "w_dead"], loss="loss.out",
+                               mesh=placement.to_mesh())
+
+    def test_non_input_param_rejected(self):
+        g = _train_graph()
+        p = plan(g)
+        part = partition_stages(g, num_stages=2)
+        with pytest.raises(ValueError, match="not a graph input"):
+            lower_train_stages(g, p, part, ["nope"],
+                               mesh=g.placement.to_mesh())
+
+    def test_split_microbatches_rejects_indivisible(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            split_microbatches({"x": np.zeros((10, 4))}, ["x"], 3)
