@@ -35,12 +35,16 @@ def emit(name: str, us: float, derived: str = "") -> None:
 
 
 def run_subprocess_bench(module: str, devices: int = 8,
-                         timeout: float = 1200.0):
+                         timeout: float = 1200.0,
+                         extra_env: dict = None):
     """Run ``python -m benchmarks.<module>`` with N placeholder devices and
-    forward its CSV lines."""
+    forward its CSV lines. ``extra_env`` adds/overrides environment entries
+    (the smoke job sets ``BENCH_SMOKE=1`` this way)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    if extra_env:
+        env.update(extra_env)
     proc = subprocess.run(
         [sys.executable, "-m", f"benchmarks.{module}"],
         env=env, capture_output=True, text=True, timeout=timeout,

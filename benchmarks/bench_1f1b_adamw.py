@@ -1,0 +1,168 @@
+"""§4.3/§6.5 + §3.3 end-to-end: stateful AdamW 1F1B training pipelines.
+
+Same setup as ``bench_1f1b_train`` (S stages on disjoint single-device
+meshes, emulated device latency, serialized R=1 vs 1F1B R[s]=S-s), but the
+optimizer is the PR-3 subsystem: per-stage AdamW state actors (the second
+register stream), a step-indexed lr schedule, and *global*-norm gradient
+clipping through the cross-stage ``norm`` actor — the P→B boxing of the
+per-stage squared-norm partials expressed on the actor protocol.
+
+Correctness gate before timing: two steps of the pipelined executor against
+the monolithic AdamW reference (loss, clipped grads, params, AdamWState and
+the global norm), plus optimizer-state persistence (step counter advances,
+moments nonzero) across every timed step.
+
+Writes ``BENCH_1f1b_adamw.json`` — see docs/benchmarks.md for the schema.
+Set ``BENCH_SMOKE=1`` to run a single repetition per quota (the CI smoke
+job); the correctness assertions still run.
+"""
+import json
+import os
+import pathlib
+import sys
+import time
+
+STAGES = 4
+MICROBATCHES = 8
+BATCH = 64
+WIDTH = 128
+FWD_LATENCY = 0.02              # emulated per-stage device time (seconds)
+BWD_LATENCY = 0.04
+GRAD_CLIP = 1.0
+
+
+def lr_schedule(step: int) -> float:
+    return 1e-3 * (0.9 ** step)
+
+
+def main():
+    sys.path.insert(0, "src")
+    import numpy as np
+
+    from benchmarks._util import emit
+    from repro.core.graph import LogicalGraph, partition_stages
+    from repro.core.lowering import OptimizerSpec, lower_train_stages
+    from repro.core.placement import Placement
+    from repro.core.planner import plan
+    from repro.runtime import TrainPipelineExecutor
+    from repro.train.steps import make_graph_train_step
+
+    import jax
+
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    reps = 1 if smoke else 3
+
+    devs = jax.devices()
+    if len(devs) < STAGES:
+        raise RuntimeError(f"need {STAGES} devices, have {len(devs)}")
+
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (BATCH, WIDTH))
+    labels = g.input("labels", (BATCH,), dtype="int32")
+    for i in range(STAGES):
+        w = g.input(f"w{i}", (WIDTH, WIDTH))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < STAGES - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+
+    opt = OptimizerSpec.adamw(lr=lr_schedule, grad_clip=GRAD_CLIP)
+    p = plan(g)
+    part = partition_stages(g, num_stages=STAGES)
+    stage_meshes = [placement.to_mesh(devices=[devs[s]])
+                    for s in range(STAGES)]
+    tstaged = lower_train_stages(g, p, part,
+                                 [f"w{i}" for i in range(STAGES)],
+                                 stage_meshes=stage_meshes, optimizer=opt)
+
+    rng = np.random.default_rng(0)
+    params = {f"w{i}": (rng.normal(size=(WIDTH, WIDTH)) * 0.5
+                        ).astype(np.float32) for i in range(STAGES)}
+    data = {"x": rng.normal(size=(BATCH, WIDTH)).astype(np.float32),
+            "labels": rng.integers(0, WIDTH, size=(BATCH,)).astype(np.int32)}
+
+    # -- correctness gate: lockstep vs the monolithic AdamW reference --------
+    mono = make_graph_train_step(g, placement.to_mesh(devices=[devs[0]]),
+                                 list(params), ["x", "labels"], MICROBATCHES,
+                                 optimizer=opt)
+    check = TrainPipelineExecutor(tstaged, dict(params), ["x", "labels"],
+                                  MICROBATCHES)
+    mono_params = dict(params)
+    for step in range(2):
+        ml, mg, mono_params = mono.step(mono_params, data)
+        pl, pg, pp = check.step(data)
+        assert np.allclose(float(pl), float(ml), rtol=1e-4), step
+        assert float(check.last_grad_norm) > GRAD_CLIP  # clipping engaged
+        assert np.allclose(float(check.last_grad_norm),
+                           float(mono.last_grad_norm), rtol=1e-5)
+        for n in params:
+            assert np.allclose(np.asarray(pg[n]), np.asarray(mg[n]),
+                               rtol=1e-3, atol=1e-6), n
+            assert np.allclose(np.asarray(pp[n]), np.asarray(mono_params[n]),
+                               rtol=1e-3, atol=1e-6), n
+    grad_norm = float(check.last_grad_norm)
+
+    def with_latency(kind, stage_index, fn):
+        delay = FWD_LATENCY if kind == "fwd" else BWD_LATENCY
+
+        def body(*args):
+            out = fn(*args)
+            time.sleep(delay)
+            return out
+        return body
+
+    def measure(regs, label):
+        ex = TrainPipelineExecutor(tstaged, dict(params), ["x", "labels"],
+                                   MICROBATCHES, regs=regs,
+                                   fn_wrap=with_latency)
+        best, peak = None, 0
+        for it in range(reps):
+            ex.step(data)
+            # state persistence across the timed steps, not just correctness
+            st = ex.opt_state
+            assert int(st.step) == it + 1, label
+            assert all(float(np.abs(np.asarray(st.mu[n])).sum()) > 0
+                       for n in params), label
+            span = ex.last_makespan
+            best = span if best is None else min(best, span)
+            peak = max(peak, ex.peak_inflight_activations)
+        return best, peak
+
+    serialized, peak_ser = measure([1] * STAGES, "serialized")
+    quota = [max(1, STAGES - s) for s in range(STAGES)]
+    pipelined, peak_1f1b = measure(quota, "1f1b")
+    speedup = serialized / pipelined
+
+    emit("1f1b_adamw/serialized_r1", serialized * 1e6,
+         f"S={STAGES};M={MICROBATCHES};peak_inflight={peak_ser}")
+    emit("1f1b_adamw/pipelined_1f1b", pipelined * 1e6,
+         f"S={STAGES};M={MICROBATCHES};peak_inflight={peak_1f1b};"
+         f"speedup={speedup:.2f};grad_norm={grad_norm:.1f}")
+
+    out = {
+        "stages": STAGES, "microbatches": MICROBATCHES,
+        "fwd_latency_s": FWD_LATENCY, "bwd_latency_s": BWD_LATENCY,
+        "serialized_s": serialized, "pipelined_s": pipelined,
+        "speedup": speedup,
+        "quota_1f1b": quota,
+        "peak_inflight_serialized": peak_ser,
+        "peak_inflight_1f1b": peak_1f1b,
+        "optimizer": "adamw", "grad_clip": GRAD_CLIP,
+        "lr_schedule": "1e-3 * 0.9**step",
+        "grad_norm_step1": grad_norm,
+    }
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "BENCH_1f1b_adamw.json")
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    if pipelined >= serialized:
+        raise RuntimeError(
+            f"pipelined AdamW makespan {pipelined:.3f}s not below "
+            f"serialized {serialized:.3f}s")
+    if peak_1f1b > max(quota):
+        raise RuntimeError(
+            f"peak in-flight {peak_1f1b} exceeds 1F1B quota {max(quota)}")
+
+
+if __name__ == "__main__":
+    main()

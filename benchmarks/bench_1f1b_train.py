@@ -21,6 +21,7 @@ peak in-flight activation counts) so the perf trajectory is recorded across
 PRs — see docs/benchmarks.md for the schema.
 """
 import json
+import os
 import pathlib
 import sys
 import time
@@ -90,7 +91,8 @@ def main():
 
     def measure(regs, label):
         best, peak = None, 0
-        for _ in range(3):           # warmup included: jit compiles on run 1
+        reps = 1 if os.environ.get("BENCH_SMOKE") else 3
+        for _ in range(reps):        # warmup included: jit compiles on run 1
             ex = TrainPipelineExecutor(tstaged, dict(params), ["x", "labels"],
                                        MICROBATCHES, regs=regs,
                                        fn_wrap=with_latency)

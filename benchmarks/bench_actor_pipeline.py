@@ -19,6 +19,7 @@ Writes ``BENCH_actor_pipeline.json`` (serialized vs pipelined makespan) so
 the perf trajectory is recorded across PRs.
 """
 import json
+import os
 import pathlib
 import sys
 import time
@@ -74,7 +75,8 @@ def main():
         ex = ActorPipelineExecutor(staged, ["x"], MICROBATCHES, regs=regs,
                                    fn_wrap=with_latency)
         best = None
-        for _ in range(3):           # warmup included: jit compiles on run 1
+        reps = 1 if os.environ.get("BENCH_SMOKE") else 3
+        for _ in range(reps):        # warmup included: jit compiles on run 1
             got = ex.run(inputs)
             assert np.allclose(got[0], ref, rtol=1e-4, atol=1e-4), label
             span = ex.last_makespan

@@ -10,6 +10,13 @@ subprocesses with placeholder host devices (the main process keeps 1 device).
   §4.3/§6.5-> bench_1f1b_train            (subprocess, 8 devices; also
               writes BENCH_1f1b_train.json: serialized vs 1F1B *training*
               makespan + peak in-flight activations)
+  §3.3+§4.3-> bench_1f1b_adamw            (subprocess, 8 devices; also
+              writes BENCH_1f1b_adamw.json: stateful AdamW + cross-stage
+              grad-clipping pipeline, serialized vs 1F1B)
+
+``--smoke`` runs only the BENCH_*.json-writing benchmarks, one repetition
+each (BENCH_SMOKE=1), so CI keeps the recording code paths honest without
+paying for full timing runs.
   Fig 9    -> bench_data_pipeline         (in-process, threads)
   Fig 10   -> bench_parallelisms dp8      (subprocess, 8 devices)
   Fig 11/12-> bench_model_parallel_softmax(subprocess, 8 devices)
@@ -21,7 +28,12 @@ import sys
 import traceback
 
 
+BENCH_WRITERS = ("bench_actor_pipeline", "bench_1f1b_train",
+                 "bench_1f1b_adamw")
+
+
 def main() -> None:
+    smoke = "--smoke" in sys.argv[1:]
     print("name,us_per_call,derived")
     from benchmarks import bench_data_pipeline, bench_pipeline_registers
     from benchmarks._util import run_subprocess_bench
@@ -35,12 +47,17 @@ def main() -> None:
             failures.append((label, repr(e)))
             traceback.print_exc(file=sys.stderr)
 
-    run("pipeline_registers", bench_pipeline_registers.main)
-    run("data_pipeline", bench_data_pipeline.main)
-    for mod in ("bench_boxing_cost", "bench_actor_pipeline",
-                "bench_1f1b_train", "bench_model_parallel_softmax",
-                "bench_embedding_mp", "bench_parallelisms"):
-        run(mod, lambda m=mod: run_subprocess_bench(m, devices=8))
+    if smoke:
+        for mod in BENCH_WRITERS:
+            run(mod, lambda m=mod: run_subprocess_bench(
+                m, devices=8, extra_env={"BENCH_SMOKE": "1"}))
+    else:
+        run("pipeline_registers", bench_pipeline_registers.main)
+        run("data_pipeline", bench_data_pipeline.main)
+        for mod in ("bench_boxing_cost", *BENCH_WRITERS,
+                    "bench_model_parallel_softmax",
+                    "bench_embedding_mp", "bench_parallelisms"):
+            run(mod, lambda m=mod: run_subprocess_bench(m, devices=8))
 
     if failures:
         print(f"# {len(failures)} benchmark failures: {failures}",

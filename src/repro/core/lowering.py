@@ -458,8 +458,88 @@ def sgd_update(w, g, lr):
 
     One shared jitted callable so the pipelined step and the monolithic
     reference (:func:`lower_train_plan`) apply a *bit-identical* update.
+    fp32 math, result cast back to the param dtype (bf16 params train with
+    fp32-accumulated gradients).
     """
-    return w - lr * g
+    return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """Pluggable optimizer for staged training programs (SGD or AdamW).
+
+    ``lr`` is either a float or a step-indexed callable ``lr(step) -> float``
+    (``step`` counts optimizer steps from 0 — the schedule is resolved on the
+    host once per step and broadcast into every stage's update program).
+    ``grad_clip`` > 0 enables *global*-norm clipping: the pipeline wires a
+    ``norm`` actor that sums per-stage squared-norm partials (P→B boxing
+    expressed as an actor) and broadcasts the clip scale back to every
+    ``opt{s}``. AdamW carries persistent :class:`repro.optim.adamw.AdamWState`
+    (step count, mu, nu) per stage — the second register stream.
+    """
+
+    kind: str = "sgd"                     # "sgd" | "adamw"
+    lr: Any = 1e-2                        # float or fn(step) -> float
+    beta1: float = 0.9                    # adamw only below
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 0.0                # 0 disables global-norm clipping
+
+    def __post_init__(self):
+        if self.kind not in ("sgd", "adamw"):
+            raise ValueError(f"unknown optimizer kind {self.kind!r}")
+
+    @classmethod
+    def sgd(cls, lr: Any = 1e-2, grad_clip: float = 0.0) -> "OptimizerSpec":
+        return cls(kind="sgd", lr=lr, grad_clip=grad_clip)
+
+    @classmethod
+    def adamw(cls, lr: Any = 3e-4, beta1: float = 0.9, beta2: float = 0.95,
+              eps: float = 1e-8, weight_decay: float = 0.1,
+              grad_clip: float = 1.0) -> "OptimizerSpec":
+        return cls(kind="adamw", lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+                   weight_decay=weight_decay, grad_clip=grad_clip)
+
+    @property
+    def stateful(self) -> bool:
+        return self.kind == "adamw"
+
+    def lr_at(self, step: int) -> float:
+        return float(self.lr(step)) if callable(self.lr) else float(self.lr)
+
+    def init_state(self, params: Dict[str, Any]):
+        """Fresh optimizer state for ``params`` (None for stateless SGD)."""
+        if self.kind == "sgd":
+            return None
+        from repro.optim.adamw import init_adamw
+        return init_adamw(dict(params))
+
+    def update(self, params: Dict[str, Any], grads: Dict[str, Any], state,
+               lr_now: float):
+        """Apply one optimizer step to ``params`` given already-clipped fp32
+        ``grads``. Returns ``(new_params, new_state)``.
+
+        Per-tensor math runs through shared jitted kernels
+        (:func:`sgd_update` / :func:`repro.optim.adamw.adamw_param_update`),
+        so applying this to per-stage param subsets (the opt actors) or to
+        the full param dict (the monolithic reference) yields bit-identical
+        values tensor by tensor.
+        """
+        if self.kind == "sgd":
+            return {n: sgd_update(params[n], grads[n], lr_now)
+                    for n in params}, None
+        from repro.optim.adamw import AdamWState, adamw_param_update
+        if state is None:
+            state = self.init_state(params)
+        new_step = state.step + 1
+        new_p, new_mu, new_nu = {}, {}, {}
+        for n in params:
+            new_p[n], new_mu[n], new_nu[n] = adamw_param_update(
+                params[n], grads[n], state.mu[n], state.nu[n], new_step,
+                lr_now, beta1=self.beta1, beta2=self.beta2, eps=self.eps,
+                weight_decay=self.weight_decay)
+        return new_p, AdamWState(new_step, new_mu, new_nu)
 
 
 def _zero_cot(v):
@@ -606,22 +686,25 @@ class TrainStagedProgram:
 
     Produced by :func:`lower_train_stages`. ``stages[s]`` holds stage s's
     forward and backward programs; ``opt_update`` is the shared per-tensor
-    optimizer program (:func:`sgd_update`). :meth:`reference_step` is the
-    sequential reference semantics; the concurrent actor-driven execution
-    (1F1B from register quotas) lives in
+    SGD program (:func:`sgd_update`), and ``optimizer`` is the pluggable
+    :class:`OptimizerSpec` (None means the executor's default SGD).
+    :meth:`reference_step` is the sequential reference semantics; the
+    concurrent actor-driven execution (1F1B from register quotas) lives in
     :class:`repro.runtime.pipeline.TrainPipelineExecutor`.
     """
 
     def __init__(self, graph: LogicalGraph, plan: Plan,
                  partition: StagePartition, stages: List[TrainStageProgram],
                  loss: LTensor, param_names: Tuple[str, ...],
-                 boundary_sbp: Dict[str, NdSbp]):
+                 boundary_sbp: Dict[str, NdSbp],
+                 optimizer: Optional[OptimizerSpec] = None):
         self.graph, self.plan, self.partition = graph, plan, partition
         self.stages = stages
         self.loss = loss
         self.param_names = param_names
         self.boundary_sbp = boundary_sbp
         self.opt_update = sgd_update
+        self.optimizer = optimizer
 
     @property
     def num_stages(self) -> int:
@@ -643,14 +726,24 @@ class TrainStagedProgram:
 
     def reference_step(self, inputs: Dict[str, Any],
                        microbatch_inputs: Sequence[str],
-                       num_microbatches: int, lr: float = 1e-2):
+                       num_microbatches: int, lr: float = 1e-2,
+                       optimizer: Optional[OptimizerSpec] = None,
+                       opt_state=None, step_index: Optional[int] = None):
         """Sequential (non-actor) execution of one training step.
 
         Runs every microbatch through all forward stages, then all backward
-        stages, accumulating gradients in microbatch order, and applies the
-        optimizer update. Returns ``(loss, grads, new_params)`` with the
-        same bit-exact semantics as the actor pipeline: the objective is the
-        sum of the loss tensor over the whole batch.
+        stages, accumulating gradients in fp32 in microbatch order, and
+        applies the optimizer update. Returns ``(loss, grads, new_params)``
+        with the same bit-exact semantics as the actor pipeline: the
+        objective is the sum of the loss tensor over the whole batch.
+
+        When an optimizer is in play (``optimizer=`` here or set on the
+        program), returns ``(loss, grads, new_params, new_state)`` instead —
+        ``grads`` post-clip, ``new_state`` None for SGD. Pass the previous
+        ``opt_state`` to continue a stateful (AdamW) run; the lr schedule
+        resolves at ``step_index`` (default: ``opt_state.step`` when stateful,
+        else 0 — a stateless SGD schedule needs ``step_index`` passed
+        explicitly on every call after the first).
         """
         chunks = split_microbatches(inputs, microbatch_inputs,
                                     num_microbatches)
@@ -674,15 +767,34 @@ class TrainStagedProgram:
                 in_cots = st.bwd(vjps[st.index], seeds)
                 for name, c in zip(st.diff_input_names, in_cots):
                     if name in st.param_names:
-                        grads[name] = (grads[name] + c if name in grads
-                                       else c)
+                        c32 = c.astype(jnp.float32)
+                        grads[name] = (grads[name] + c32 if name in grads
+                                       else c32)
                     else:
                         cots[name] = (cots[name] + c if name in cots else c)
             ls = jnp.sum(env[self.loss_name])
             loss_total = ls if loss_total is None else loss_total + ls
-        new_params = {n: self.opt_update(inputs[n], grads[n], lr)
-                      for n in self.param_names}
-        return loss_total, grads, new_params
+        opt = optimizer if optimizer is not None else self.optimizer
+        if opt is None:
+            new_params = {n: self.opt_update(inputs[n], grads[n], lr)
+                          for n in self.param_names}
+            return loss_total, grads, new_params
+        from repro.optim.adamw import (clip_scale, global_norm_from_partials,
+                                       scale_grad, sqnorm_partials)
+        if opt.grad_clip:
+            norm = global_norm_from_partials(sqnorm_partials(grads),
+                                             self.param_names)
+            scale = clip_scale(norm, opt.grad_clip)
+            grads = {n: scale_grad(g, scale) for n, g in grads.items()}
+        if opt.stateful and opt_state is None:
+            opt_state = opt.init_state({n: inputs[n]
+                                        for n in self.param_names})
+        if step_index is None:
+            step_index = int(opt_state.step) if opt_state is not None else 0
+        new_params, new_state = opt.update(
+            {n: inputs[n] for n in self.param_names}, grads, opt_state,
+            opt.lr_at(step_index))
+        return loss_total, grads, new_params, new_state
 
 
 def lower_train_plan(graph: LogicalGraph, plan: Plan, mesh, params,
@@ -733,7 +845,8 @@ def lower_train_plan(graph: LogicalGraph, plan: Plan, mesh, params,
 
 def lower_train_stages(graph: LogicalGraph, plan: Plan,
                        partition: StagePartition, params, loss=None,
-                       mesh=None, stage_meshes: Optional[Sequence] = None
+                       mesh=None, stage_meshes: Optional[Sequence] = None,
+                       optimizer: Optional[OptimizerSpec] = None
                        ) -> TrainStagedProgram:
     """Cut a training graph into forward / backward / optimizer programs.
 
@@ -747,7 +860,9 @@ def lower_train_stages(graph: LogicalGraph, plan: Plan,
     ``params`` names the graph inputs to be trained; each must be consumed by
     ops of exactly one stage (pipeline parallelism shards params by stage).
     ``loss`` names the graph sink to differentiate (default: the sole sink).
-    ``mesh`` / ``stage_meshes`` as in :func:`lower_stages`.
+    ``mesh`` / ``stage_meshes`` as in :func:`lower_stages`. ``optimizer`` is
+    an optional :class:`OptimizerSpec` carried on the program (the executor
+    falls back to plain SGD when absent).
     """
     meshes = _resolve_meshes(partition, mesh, stage_meshes)
     loss_t = _resolve_loss(graph, loss)
@@ -827,4 +942,4 @@ def lower_train_stages(graph: LogicalGraph, plan: Plan,
 
     all_params = tuple(p.name for p in param_ts)
     return TrainStagedProgram(graph, plan, partition, stages, loss_t,
-                              all_params, boundary_sbp)
+                              all_params, boundary_sbp, optimizer=optimizer)

@@ -16,6 +16,7 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import pvary
 from repro.core.boxing import boxing_fn
 from repro.core.sbp import NdSbp, Split, ndsbp
 
@@ -138,7 +139,7 @@ def force_vary(x, axis_names):
         return x
     vma = getattr(jax.core.get_aval(x), "vma", frozenset()) or frozenset()
     missing = tuple(n for n in names if n not in vma)
-    return jax.lax.pvary(x, missing) if missing else x
+    return pvary(x, missing) if missing else x
 
 
 def certified_pmean(x, axis_name):

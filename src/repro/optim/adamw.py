@@ -1,8 +1,31 @@
-"""AdamW in pure JAX (pytree-structured, no optax dependency)."""
+"""AdamW in pure JAX (pytree-structured, no optax dependency).
+
+Besides the pytree-at-once :func:`adamw_update` (the SPMD/ZeRO path), this
+module exposes the *per-stage* entry points the pipeline optimizer actors are
+built from (paper §3.3: partial-value reductions as first-class dataflow):
+
+* :func:`sqnorm_partials` — each pipeline stage's contribution to the global
+  gradient norm, one fp32 scalar per tensor (a P partial);
+* :func:`global_norm_from_partials` — the P→B combine: sum the partials in
+  one canonical order on the host (stage partials may live on disjoint
+  device meshes) and take the square root;
+* :func:`clip_scale` / :func:`scale_grad` — the broadcast clip factor and
+  its per-tensor application;
+* :func:`adamw_param_update` — one tensor's AdamW update given a pre-clipped
+  gradient and an explicit step count.
+
+The monolithic reference (:func:`repro.train.steps.make_graph_train_step`)
+and the pipeline's per-stage optimizer actors call the *same* jitted kernels
+with the same canonical summation order, which is what makes the pipelined
+update bit-identical to the monolithic one.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -51,22 +74,79 @@ def adamw_update(cfg: AdamWConfig, params, grads, state: AdamWState,
     else:
         norm = global_norm(grads)
     step = state.step + 1
-    b1, b2 = cfg.beta1, cfg.beta2
-    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
-    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
     lr = cfg.lr * lr_scale
 
     def upd(p, g, m, v):
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        mhat = m / bc1
-        vhat = v / bc2
-        new_p = p.astype(jnp.float32) - lr * (
-            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32))
-        return new_p.astype(p.dtype), m, v
+        return adamw_param_update(p, g, m, v, step, lr, beta1=cfg.beta1,
+                                  beta2=cfg.beta2, eps=cfg.eps,
+                                  weight_decay=cfg.weight_decay)
 
     out = jax.tree.map(upd, params, grads, state.mu, state.nu)
     new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
     new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
     new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
     return new_params, AdamWState(step, new_mu, new_nu), norm
+
+
+# ---------------------------------------------------------------------------
+# Per-stage entry points for the pipeline optimizer actors (paper §3.3/§4.3).
+# ---------------------------------------------------------------------------
+
+_sqnorm = jax.jit(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))))
+_scale = jax.jit(lambda g, s: g.astype(jnp.float32) * s)
+
+
+def sqnorm_partials(grads: Dict[str, Any]) -> Dict[str, Any]:
+    """One fp32 squared-norm scalar per gradient tensor — a pipeline stage's
+    partial-value (P) contribution to the global gradient norm."""
+    return {n: _sqnorm(g) for n, g in grads.items()}
+
+
+def global_norm_from_partials(partials: Dict[str, Any],
+                              order: Sequence[str]) -> np.float32:
+    """The P→B combine: sum per-tensor partials in the canonical ``order``
+    and take the square root.
+
+    Runs in numpy on the host because the partials of different pipeline
+    stages may be committed to *disjoint* device meshes; fp32 addition is not
+    associative, so fixing one summation order is what lets the pipelined
+    norm match the monolithic one bit for bit.
+    """
+    total = np.float32(0.0)
+    for n in order:
+        if n in partials:
+            total = np.float32(total + np.float32(partials[n]))
+    return np.float32(np.sqrt(total))
+
+
+def clip_scale(norm, max_norm: float) -> np.float32:
+    """Gradient scale factor for global-norm clipping: ``min(1, c/norm)``.
+    Returns 1.0 when ``max_norm`` is falsy (clipping disabled)."""
+    if not max_norm:
+        return np.float32(1.0)
+    return np.float32(min(1.0, float(max_norm) / max(float(norm), 1e-12)))
+
+
+def scale_grad(g, scale):
+    """Apply the broadcast clip factor to one gradient tensor (fp32)."""
+    return _scale(g, scale)
+
+
+@partial(jax.jit, static_argnames=("beta1", "beta2", "eps", "weight_decay"))
+def adamw_param_update(p, g, m, v, step, lr, *, beta1: float = 0.9,
+                       beta2: float = 0.95, eps: float = 1e-8,
+                       weight_decay: float = 0.1):
+    """One tensor's AdamW update. ``g`` is the already-clipped fp32 gradient,
+    ``step`` the *new* (1-based) step count, ``lr`` the schedule-resolved
+    learning rate. All math in fp32; the returned param keeps ``p.dtype``.
+    Returns ``(new_p, new_m, new_v)``."""
+    g = g.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - beta2 ** step.astype(jnp.float32)
+    m = beta1 * m + (1 - beta1) * g
+    v = beta2 * v + (1 - beta2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    p32 = p.astype(jnp.float32)
+    new_p = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+    return new_p.astype(p.dtype), m, v

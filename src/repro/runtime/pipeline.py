@@ -267,6 +267,14 @@ class ActorPipelineExecutor:
     def __init__(self, staged, microbatch_inputs: Sequence[str],
                  num_microbatches: int, regs: Optional[Sequence[int]] = None,
                  fn_wrap: Optional[Callable] = None):
+        if num_microbatches < 1:
+            raise ValueError(
+                f"num_microbatches must be >= 1, got {num_microbatches}")
+        if regs is not None:
+            regs = list(regs)
+            if len(regs) != staged.num_stages:
+                raise ValueError(f"need {staged.num_stages} register quotas, "
+                                 f"got {len(regs)}")
         self.staged = staged
         self.microbatch_inputs = list(microbatch_inputs)
         self.num_microbatches = num_microbatches
@@ -330,6 +338,10 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
                             num_microbatches: int, lr: float = 1e-2,
                             regs: Optional[Sequence[int]] = None,
                             fn_wrap: Optional[Callable] = None,
+                            optimizer=None,
+                            opt_states: Optional[Dict[int, Any]] = None,
+                            step_index: int = 0,
+                            placed_params: Optional[Dict[int, Dict[str, Any]]] = None,
                             ) -> Tuple[List[ActorSpec], List[str]]:
     """Build the fwd/bwd/opt actor graph executing one training step.
 
@@ -343,14 +355,38 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
     ``{"fwd", "bwd"}`` optionally decorates the stage bodies (benchmarks use
     it to emulate device latency).
 
+    The optimizer subsystem (paper §3.3 partial-value + §4.3 actors):
+
+    * ``optimizer`` is a :class:`repro.core.lowering.OptimizerSpec` (falls
+      back to ``tstaged.optimizer``, then plain SGD at ``lr``). Its lr
+      schedule is resolved at ``step_index`` on the host.
+    * With ``optimizer.grad_clip`` > 0, every ``acc{s}`` emits its
+      stage-local squared-norm partials alongside the summed gradients, and
+      a ``norm`` actor — OneFlow's P→B boxing expressed as an actor — sums
+      the partials in canonical param order and broadcasts the clip scale
+      sideways to every ``opt{s}``.
+    * With a stateful optimizer (AdamW), a ``state{s}`` source actor emits
+      the current per-stage optimizer state (``opt_states[s]``, fresh when
+      None) as a register that ``opt{s}`` consumes — the second register
+      stream; the updated state rides the opt actor's output payload.
+    * ``placed_params[s]``, when given, are the stage's param values already
+      placed on its mesh (the executor re-binds them across steps instead of
+      transferring from host every step).
+
+    Gradients are accumulated in fp32 regardless of the backward dtype
+    (matching the optimizer kernels' fp32 math).
+
     Returns ``(specs, collect_names)``: ``collect_names[0]`` is the backward
     actor of the loss-producing stage (the per-microbatch loss stream), the
-    rest are the ``opt{s}`` actors (each stage's summed gradients and
-    updated params).
+    rest are the ``opt{s}`` actors (each stage's post-clip gradients,
+    updated params, and new optimizer state).
     """
     import jax
+    import jax.numpy as jnp
 
-    from repro.core.lowering import split_microbatches
+    from repro.core.lowering import OptimizerSpec, split_microbatches
+    from repro.optim.adamw import (clip_scale, global_norm_from_partials,
+                                   scale_grad, sqnorm_partials)
 
     S = tstaged.num_stages
     if regs is None:
@@ -365,6 +401,18 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
         if n not in tstaged.input_names:
             raise ValueError(f"{n} is not a graph input")
     payloads = split_microbatches(inputs, mb_names, num_microbatches)
+
+    opt = optimizer if optimizer is not None else (
+        tstaged.optimizer if tstaged.optimizer is not None
+        else OptimizerSpec.sgd(lr))
+    lr_now = opt.lr_at(step_index)
+    clip = bool(opt.grad_clip)
+    param_order = tstaged.param_names
+    param_stages = [st.index for st in tstaged.stages if st.param_names]
+    if opt.stateful and opt_states is None:
+        opt_states = {st.index: opt.init_state({n: inputs[n]
+                                                for n in st.param_names})
+                      for st in tstaged.stages if st.param_names}
 
     graph_inputs = set(tstaged.input_names)
     loss_name = tstaged.loss_name
@@ -400,9 +448,7 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
         out_regs=2, node=0, thread=0, max_fires=num_microbatches,
         wants_version=True))
 
-    def make_fwd_fn(stage, bound):
-        bound, shard_of = _bind_placed(stage, bound)
-
+    def make_fwd_fn(stage, bound, shard_of):
         def run_fwd(payload):
             incoming = _place_incoming(stage.input_names, bound, shard_of,
                                        payload)
@@ -442,27 +488,66 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
         return run_bwd
 
     def make_acc_fn():
+        # per-microbatch gradients accumulate in fp32 (the optimizer kernels'
+        # math dtype) no matter what dtype the backward emits (e.g. bf16)
         state: Dict[str, Any] = {}
+        meta = {"fires": 0}
 
         def run_acc(b_payload):
+            meta["fires"] += 1
             for n, g in b_payload["grads"].items():
-                state[n] = state[n] + g if n in state else g
-            return dict(state)
+                g32 = g.astype(jnp.float32)
+                state[n] = state[n] + g32 if n in state else g32
+            out = {"grads": dict(state)}
+            if clip and meta["fires"] == num_microbatches:
+                # the stage-local P contribution to the global grad norm
+                out["sqnorms"] = sqnorm_partials(state)
+            return out
         return run_acc
 
-    def make_opt_fn(stage, bound_params):
-        def run_opt(grads):
-            new = {n: tstaged.opt_update(bound_params[n], grads[n], lr)
-                   for n in stage.param_names}
-            new = jax.block_until_ready(new)
-            return {"params": new, "grads": grads}
+    def make_opt_fn(stage, bound):
+        pnames = stage.param_names
+
+        def run_opt(acc_payload, *rest):
+            idx = 0
+            norm_payload = None
+            state = None
+            if clip:
+                norm_payload = rest[idx]
+                idx += 1
+            if opt.stateful:
+                state = rest[idx]["state"]
+                idx += 1
+            grads = acc_payload["grads"]
+            if norm_payload is not None:
+                grads = {n: scale_grad(grads[n], norm_payload["scale"])
+                         for n in pnames}
+            else:
+                grads = {n: grads[n] for n in pnames}
+            new_params, new_state = opt.update(
+                {n: bound[n] for n in pnames}, grads, state, lr_now)
+            new_params = jax.block_until_ready(new_params)
+            out = {"params": new_params, "grads": grads}
+            if opt.stateful:
+                out["state"] = new_state
+            if norm_payload is not None:
+                out["norm"] = norm_payload["norm"]
+            return out
         return run_opt
 
     collect = []
     for s, stage in enumerate(tstaged.stages):
-        bound = {n: inputs[n] for n in stage.input_names
-                 if n in graph_inputs and n not in mb_names}
-        fwd_fn = make_fwd_fn(stage, bound)
+        stage_param_set = set(stage.param_names)
+        bound_raw = {n: inputs[n] for n in stage.input_names
+                     if n in graph_inputs and n not in mb_names}
+        if placed_params is not None and s in placed_params:
+            rest = {n: v for n, v in bound_raw.items()
+                    if n not in stage_param_set}
+            rest_placed, shard_of = _bind_placed(stage, rest)
+            bound = {**rest_placed, **placed_params[s]}
+        else:
+            bound, shard_of = _bind_placed(stage, bound_raw)
+        fwd_fn = make_fwd_fn(stage, bound, shard_of)
         bwd_fn = make_bwd_fn(stage)
         if fn_wrap is not None:
             fwd_fn = fn_wrap("fwd", s, fwd_fn)
@@ -482,11 +567,41 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
                 name=f"acc{s}", fn=make_acc_fn(), inputs=(f"b{s}",),
                 out_regs=1, node=0, thread=s + 1,
                 max_fires=num_microbatches, emit_every=num_microbatches))
+            opt_inputs = (f"acc{s}",)
+            if clip:
+                opt_inputs += ("norm",)
+            if opt.stateful:
+                # the optimizer-state register stream: a source actor emits
+                # the current AdamWState; opt{s} consumes it next to the
+                # summed gradients and the broadcast clip scale
+                state_payload = {"state": opt_states[s]}
+                specs.append(ActorSpec(
+                    name=f"state{s}", fn=lambda _sp=state_payload: _sp,
+                    inputs=(), out_regs=1, node=0, thread=s + 1,
+                    max_fires=1))
+                opt_inputs += (f"state{s}",)
             specs.append(ActorSpec(
                 name=f"opt{s}", fn=make_opt_fn(stage, bound),
-                inputs=(f"acc{s}",), out_regs=1, node=0, thread=s + 1,
+                inputs=opt_inputs, out_regs=1, node=0, thread=s + 1,
                 max_fires=1))
             collect.append(f"opt{s}")
+
+    if clip and param_stages:
+        # cross-stage *sideways* communication on the actor protocol: sum the
+        # per-stage squared-norm partials (P→B boxing as an actor) and
+        # broadcast the clip scale to every opt{s}
+        def run_norm(*acc_payloads):
+            partials = {}
+            for pl in acc_payloads:
+                partials.update(pl["sqnorms"])
+            norm = global_norm_from_partials(partials, param_order)
+            return {"norm": norm, "scale": clip_scale(norm, opt.grad_clip)}
+
+        specs.append(ActorSpec(
+            name="norm", fn=run_norm,
+            inputs=tuple(f"acc{s}" for s in param_stages),
+            out_regs=1, node=0, thread=0, max_fires=1))
+
     collect.insert(0, f"b{loss_stage}")
     return specs, collect
 
@@ -494,12 +609,24 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
 class TrainPipelineExecutor:
     """Run a :class:`TrainStagedProgram` as a 1F1B training pipeline.
 
-    Holds the current params; each :meth:`step` builds a fresh fwd/bwd/opt
-    actor graph (actors are single-use state machines), streams the
-    microbatches through it, and applies the optimizer update — returning
-    ``(loss, grads, params)`` bit-identical to the monolithic reference
-    (:func:`repro.core.lowering.lower_train_plan` accumulated in microbatch
-    order; the objective is the *sum* of the loss tensor over the batch).
+    Holds the current params *and the optimizer state*; each :meth:`step`
+    builds a fresh fwd/bwd/opt actor graph (actors are single-use state
+    machines), streams the microbatches through it, and applies the
+    optimizer update — returning ``(loss, grads, params)`` bit-identical to
+    the monolithic reference (:func:`repro.train.steps.make_graph_train_step`
+    with the same :class:`repro.core.lowering.OptimizerSpec`; the objective
+    is the *sum* of the loss tensor over the batch, ``grads`` are post-clip
+    when global-norm clipping is on).
+
+    Optimizer statefulness (the tentpole of PR 3): per-stage
+    :class:`repro.optim.adamw.AdamWState` lives in ``opt_states`` between
+    steps and re-enters each step's actor graph through a ``state{s}`` source
+    actor — a second register stream next to the weights. Stage params are
+    placed on their stage mesh once at construction and re-bound from the
+    optimizer actors' outputs (already on-mesh) instead of being transferred
+    from the host every step. ``opt_state`` merges the per-stage states;
+    ``last_grad_norm`` is the global gradient norm the ``norm`` actor
+    computed (None when clipping is off).
 
     Instrumentation mirrors :class:`ActorPipelineExecutor`:
     ``last_makespan`` (wall-clock seconds), ``last_history`` (per-actor
@@ -511,10 +638,26 @@ class TrainPipelineExecutor:
     def __init__(self, tstaged, params: Dict[str, Any],
                  microbatch_inputs: Sequence[str], num_microbatches: int,
                  lr: float = 1e-2, regs: Optional[Sequence[int]] = None,
-                 fn_wrap: Optional[Callable] = None):
+                 fn_wrap: Optional[Callable] = None, optimizer=None):
+        import jax
+
+        from repro.core.lowering import OptimizerSpec
+
         missing = [n for n in tstaged.param_names if n not in params]
         if missing:
             raise ValueError(f"missing params: {missing}")
+        if num_microbatches < 1:
+            raise ValueError(
+                f"num_microbatches must be >= 1, got {num_microbatches}")
+        if regs is not None:
+            regs = list(regs)
+            if len(regs) != tstaged.num_stages:
+                raise ValueError(
+                    f"need {tstaged.num_stages} register quotas, "
+                    f"got {len(regs)}")
+        for n in microbatch_inputs:
+            if n not in tstaged.input_names:
+                raise ValueError(f"{n} is not a graph input")
         self.tstaged = tstaged
         self.params = {n: params[n] for n in tstaged.param_names}
         self.microbatch_inputs = list(microbatch_inputs)
@@ -522,6 +665,28 @@ class TrainPipelineExecutor:
         self.lr = lr
         self.regs = regs
         self.fn_wrap = fn_wrap
+        self.optimizer = optimizer if optimizer is not None else (
+            tstaged.optimizer if tstaged.optimizer is not None
+            else OptimizerSpec.sgd(lr))
+        # bind stage params onto their meshes once; opt actors return the
+        # updated values already placed, so steps never re-transfer weights
+        self._placed_params: Dict[int, Dict[str, Any]] = {}
+        for st in tstaged.stages:
+            if not st.param_names:
+                continue
+            vals = {n: self.params[n] for n in st.param_names}
+            if st.in_shardings is not None:
+                shard_of = dict(zip(st.input_names, st.in_shardings))
+                vals = {n: jax.device_put(v, shard_of[n])
+                        for n, v in vals.items()}
+            self._placed_params[st.index] = vals
+        # persistent per-stage optimizer state (None entries for SGD)
+        self.opt_states: Dict[int, Any] = {
+            st.index: self.optimizer.init_state(
+                {n: self.params[n] for n in st.param_names})
+            for st in tstaged.stages if st.param_names}
+        self.step_count = 0
+        self.last_grad_norm = None
         self.last_makespan: Optional[float] = None
         self.last_history: Dict[str, List[Tuple[float, float]]] = {}
         self.last_peak_regs: Dict[str, int] = {}
@@ -529,16 +694,34 @@ class TrainPipelineExecutor:
     @property
     def peak_inflight_activations(self) -> int:
         """Peak forward registers in use across stages in the last step —
-        the in-flight microbatch count the quota back-pressures."""
-        return max(self.last_peak_regs.get(f"f{s}", 0)
-                   for s in range(self.tstaged.num_stages))
+        the in-flight microbatch count the quota back-pressures. Zero
+        before the first step (or for a zero-stage program)."""
+        return max((self.last_peak_regs.get(f"f{s}", 0)
+                    for s in range(self.tstaged.num_stages)), default=0)
+
+    @property
+    def opt_state(self):
+        """The per-stage optimizer states merged into one
+        :class:`repro.optim.adamw.AdamWState` over all params (None for a
+        stateless optimizer)."""
+        if not self.optimizer.stateful:
+            return None
+        from repro.optim.adamw import AdamWState
+        states = [self.opt_states[s] for s in sorted(self.opt_states)]
+        mu: Dict[str, Any] = {}
+        nu: Dict[str, Any] = {}
+        for st in states:
+            mu.update(st.mu)
+            nu.update(st.nu)
+        return AdamWState(states[0].step, mu, nu)
 
     def step(self, data_inputs: Dict[str, Any], timeout: float = 300.0):
         """Run one training step over the current params.
 
         ``data_inputs`` maps non-param graph inputs to values (the
-        microbatched ones are split along axis 0). Updates ``self.params``
-        in place and returns ``(loss, grads, params)``.
+        microbatched ones are split along axis 0). Updates ``self.params``,
+        ``self.opt_states`` and the step counter in place and returns
+        ``(loss, grads, params)``.
         """
         import jax.numpy as jnp
 
@@ -547,7 +730,9 @@ class TrainPipelineExecutor:
         specs, collect = train_stage_actor_specs(
             self.tstaged, inputs, self.microbatch_inputs,
             self.num_microbatches, lr=self.lr, regs=self.regs,
-            fn_wrap=self.fn_wrap)
+            fn_wrap=self.fn_wrap, optimizer=self.optimizer,
+            opt_states=self.opt_states, step_index=self.step_count,
+            placed_params=self._placed_params)
         rt = ThreadedRuntime(specs, collect_outputs_of=collect)
         t0 = time.perf_counter()
         outs = rt.run(timeout=timeout)
@@ -570,8 +755,17 @@ class TrainPipelineExecutor:
             loss = ls if loss is None else loss + ls
 
         grads: Dict[str, Any] = {}
+        norm = None
         for name in collect[1:]:
             (opt_out,) = outs[name]        # optimizer fired exactly once
+            s = int(name[len("opt"):])
             grads.update(opt_out["grads"])
             self.params.update(opt_out["params"])
+            self._placed_params[s].update(opt_out["params"])
+            if "state" in opt_out:
+                self.opt_states[s] = opt_out["state"]
+            if "norm" in opt_out:
+                norm = opt_out["norm"]
+        self.last_grad_norm = norm
+        self.step_count += 1
         return loss, grads, dict(self.params)

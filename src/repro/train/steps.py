@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import pvary, shard_map
 from repro.configs.base import InputShape, ModelConfig
 from repro.models.common import MeshPlan
 from repro.models.model_zoo import build_model, cache_specs, make_decode_caches
@@ -156,7 +156,7 @@ def make_train_step(cfg: ModelConfig, mesh, optimizer: AdamWConfig = None,
         vma = getattr(jax.core.get_aval(v), "vma", frozenset())
         missing = tuple(n for n in plan.axis_names if n not in vma)
         if missing:
-            v = jax.lax.pvary(v, missing)
+            v = pvary(v, missing)
         return jax.lax.pmean(v, plan.axis_names)
 
     metric_names = {"lm_loss": 0, "aux_loss": 0, "loss": 0,
@@ -333,15 +333,29 @@ class GraphTrainStep:
 
     ``step_fn(param_values, data) -> (loss, grads, new_params)``: runs every
     microbatch through one whole-graph jitted value-and-grad program,
-    accumulates, and applies :func:`repro.core.lowering.sgd_update`. The
-    objective is the sum of the loss sink over the whole batch. This is the
-    reference :func:`make_pipeline_train_step` is checked against.
+    accumulates gradients in fp32, and applies the
+    :class:`repro.core.lowering.OptimizerSpec` (default plain SGD) — with
+    global-norm clipping and the lr schedule resolved exactly like the
+    pipeline's optimizer actors, via the same
+    :mod:`repro.optim.adamw` kernels in the same canonical param order. The
+    objective is the sum of the loss sink over the whole batch; ``grads``
+    are post-clip when clipping is on. This is the reference
+    :func:`make_pipeline_train_step` is checked against, bit for bit.
+
+    A stateful optimizer's :class:`repro.optim.adamw.AdamWState` persists on
+    ``opt_state`` across :meth:`step` calls; ``step_count`` indexes the lr
+    schedule; ``last_grad_norm`` is the pre-clip global norm (None when
+    clipping is off).
     """
 
     step_fn: Any
     param_names: Tuple[str, ...]
     num_microbatches: int
     lr: float
+    optimizer: Any = None
+    opt_state: Any = None
+    step_count: int = 0
+    last_grad_norm: Any = None
 
     def step(self, param_values: Dict[str, Any], data: Dict[str, Any]):
         return self.step_fn(param_values, data)
@@ -349,17 +363,21 @@ class GraphTrainStep:
 
 def make_graph_train_step(graph, mesh, params, microbatch_inputs,
                           num_microbatches: int, lr: float = 1e-2,
-                          loss=None, graph_plan=None) -> GraphTrainStep:
+                          loss=None, graph_plan=None,
+                          optimizer=None) -> GraphTrainStep:
     """Build the monolithic (non-pipelined) training step for ``graph``.
 
     ``params`` names the graph inputs to train; ``microbatch_inputs`` names
     the inputs split along axis 0 into ``num_microbatches`` chunks. The SBP
     plan is computed with :func:`repro.core.planner.plan` unless
-    ``graph_plan`` is given.
+    ``graph_plan`` is given. ``optimizer`` is an
+    :class:`repro.core.lowering.OptimizerSpec` (default: SGD at ``lr``).
     """
-    from repro.core.lowering import (lower_train_plan, sgd_update,
+    from repro.core.lowering import (OptimizerSpec, lower_train_plan,
                                      split_microbatches)
     from repro.core.planner import plan as plan_sbp
+    from repro.optim.adamw import (clip_scale, global_norm_from_partials,
+                                   scale_grad, sqnorm_partials)
 
     p = graph_plan if graph_plan is not None else plan_sbp(graph)
     vg = lower_train_plan(graph, p, mesh, params, loss=loss)
@@ -367,6 +385,11 @@ def make_graph_train_step(graph, mesh, params, microbatch_inputs,
     input_names = [t.name for t in graph.inputs]
     mb_names = list(microbatch_inputs)
     mb = set(mb_names)
+    opt = optimizer if optimizer is not None else OptimizerSpec.sgd(lr)
+
+    ts = GraphTrainStep(step_fn=None, param_names=param_names,
+                        num_microbatches=num_microbatches, lr=lr,
+                        optimizer=opt)
 
     def step_fn(param_values: Dict[str, Any], data: Dict[str, Any]):
         chunks = split_microbatches(data, mb_names, num_microbatches)
@@ -378,15 +401,27 @@ def make_graph_train_step(graph, mesh, params, microbatch_inputs,
             loss_vec, g = vg(*vals)
             ls = jnp.sum(loss_vec)
             loss_total = ls if loss_total is None else loss_total + ls
-            grads = (list(g) if grads is None
-                     else [a + b for a, b in zip(grads, g)])
+            g32 = [x.astype(jnp.float32) for x in g]
+            grads = (g32 if grads is None
+                     else [a + b for a, b in zip(grads, g32)])
         gdict = dict(zip(param_names, grads))
-        new_params = {n: sgd_update(param_values[n], gdict[n], lr)
-                      for n in param_names}
+        if opt.grad_clip:
+            norm = global_norm_from_partials(sqnorm_partials(gdict),
+                                             param_names)
+            scale = clip_scale(norm, opt.grad_clip)
+            gdict = {n: scale_grad(g, scale) for n, g in gdict.items()}
+            ts.last_grad_norm = norm
+        if opt.stateful and ts.opt_state is None:
+            ts.opt_state = opt.init_state(
+                {n: param_values[n] for n in param_names})
+        new_params, ts.opt_state = opt.update(
+            {n: param_values[n] for n in param_names}, gdict, ts.opt_state,
+            opt.lr_at(ts.step_count))
+        ts.step_count += 1
         return loss_total, gdict, new_params
 
-    return GraphTrainStep(step_fn=step_fn, param_names=param_names,
-                          num_microbatches=num_microbatches, lr=lr)
+    ts.step_fn = step_fn
+    return ts
 
 
 def make_pipeline_train_step(graph, init_params: Dict[str, Any],
@@ -394,7 +429,7 @@ def make_pipeline_train_step(graph, init_params: Dict[str, Any],
                              num_stages: Optional[int] = None, mesh=None,
                              stage_meshes=None, lr: float = 1e-2,
                              regs=None, loss=None, graph_plan=None,
-                             fn_wrap=None):
+                             fn_wrap=None, optimizer=None):
     """Build the 1F1B pipelined alternative to :func:`make_graph_train_step`.
 
     Cuts ``graph`` into stages (user ``graph.stage(k)`` annotations, or
@@ -407,7 +442,11 @@ def make_pipeline_train_step(graph, init_params: Dict[str, Any],
     default ``num_stages - s``).
 
     ``init_params`` maps each trainable graph input to its initial value;
-    the executor owns the params from then on.
+    the executor owns the params (and any optimizer state) from then on.
+    ``optimizer`` is an :class:`repro.core.lowering.OptimizerSpec` —
+    AdamW runs with per-stage state actors and, with ``grad_clip`` > 0, a
+    cross-stage ``norm`` actor for global-norm clipping (default: SGD at
+    ``lr``).
     """
     from repro.core.graph import partition_stages
     from repro.core.lowering import lower_train_stages
@@ -424,7 +463,8 @@ def make_pipeline_train_step(graph, init_params: Dict[str, Any],
         raise ValueError(f"init_params entries are not graph inputs: "
                          f"{sorted(extra)}")
     tstaged = lower_train_stages(graph, p, partition, param_names, loss=loss,
-                                 mesh=mesh, stage_meshes=stage_meshes)
+                                 mesh=mesh, stage_meshes=stage_meshes,
+                                 optimizer=optimizer)
     return TrainPipelineExecutor(tstaged, init_params, microbatch_inputs,
                                  num_microbatches, lr=lr, regs=regs,
-                                 fn_wrap=fn_wrap)
+                                 fn_wrap=fn_wrap, optimizer=optimizer)

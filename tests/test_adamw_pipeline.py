@@ -1,0 +1,376 @@
+"""Stateful AdamW optimizer actors + cross-stage global-norm clipping (PR 3).
+
+The tentpole's acceptance criteria, pinned down:
+
+(a) pipeline AdamW — with global-norm clipping and a step-indexed lr
+    schedule — is *bit-identical* to the monolithic AdamW reference over
+    multiple steps: loss, post-clip gradients, AdamWState (step/mu/nu) and
+    params;
+(b) optimizer state demonstrably persists across
+    ``TrainPipelineExecutor.step`` calls: the step counter advances, mu/nu
+    become nonzero, and each step's ``state{s}`` actors feed the previous
+    step's state back into the actor graph;
+(c) the ``norm`` actor (OneFlow's P→B boxing as an actor — the first
+    *sideways* cross-stage edge) fires exactly once per step and its clip
+    scale reaches every ``opt{s}``;
+(d) gradient accumulation is fp32 even when the backward emits bf16, pinned
+    by a bf16 bit-identity test;
+(e) executors validate their configuration at construction and
+    ``peak_inflight_activations`` is safe before the first step.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.graph import LogicalGraph, partition_stages
+from repro.core.lowering import OptimizerSpec, lower_train_stages
+from repro.core.placement import Placement
+from repro.core.planner import plan
+from repro.train.steps import make_graph_train_step, make_pipeline_train_step
+
+B, W, DEPTH = 16, 32, 4
+
+
+def _train_graph(depth=DEPTH, batch=B, width=W):
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (batch, width))
+    labels = g.input("labels", (batch,), dtype="int32")
+    for i in range(depth):
+        w = g.input(f"w{i}", (width, width))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < depth - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+    return g
+
+
+def _params_and_data(g, seed=0, w_scale=0.1):
+    rng = np.random.default_rng(seed)
+    params, data = {}, {}
+    for t in g.inputs:
+        if t.name.startswith("w"):
+            params[t.name] = (rng.normal(size=t.shape) * w_scale
+                              ).astype(np.float32)
+        elif t.dtype == "int32":
+            data[t.name] = rng.integers(0, W, size=t.shape).astype(np.int32)
+        else:
+            data[t.name] = rng.normal(size=t.shape).astype(np.float32)
+    return params, data
+
+
+def _assert_states_equal(ms, ps, params):
+    assert int(ms.step) == int(ps.step)
+    for n in params:
+        assert bool(jnp.all(ms.mu[n] == ps.mu[n])), f"mu[{n}]"
+        assert bool(jnp.all(ms.nu[n] == ps.nu[n])), f"nu[{n}]"
+
+
+class TestAdamWBitIdentical:
+    def test_adamw_clip_schedule_matches_monolithic_over_three_steps(self):
+        """Criterion (a): loss, clipped grads, AdamWState and params agree
+        bitwise for three consecutive steps, with clipping active and a
+        decaying lr schedule."""
+        g = _train_graph()
+        # w_scale=0.5 makes the global grad norm far exceed grad_clip, so
+        # the clip scale is genuinely < 1 in every step of this test
+        params, data = _params_and_data(g, w_scale=0.5)
+        mesh = g.placement.to_mesh()
+        opt = OptimizerSpec.adamw(lr=lambda step: 1e-3 * (0.5 ** step),
+                                  grad_clip=0.5)
+        mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
+                                     num_microbatches=4, optimizer=opt)
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=4, num_stages=4,
+                                        mesh=mesh, optimizer=opt)
+        mono_params = dict(params)
+        for step in range(3):
+            ml, mg, mono_params = mono.step(mono_params, data)
+            pl, pg, pipe_params = pipe.step(data)
+            assert bool(ml == pl), f"loss diverged at step {step}"
+            for n in params:
+                assert bool(jnp.all(mg[n] == pg[n])), \
+                    f"clipped grad {n} diverged at step {step}"
+                assert bool(jnp.all(mono_params[n] == pipe_params[n])), \
+                    f"param {n} diverged at step {step}"
+            _assert_states_equal(mono.opt_state, pipe.opt_state, params)
+            # the norm actor's P->B combine equals the monolithic norm and
+            # clipping was actually engaged (scale < 1)
+            assert float(pipe.last_grad_norm) == float(mono.last_grad_norm)
+            assert float(pipe.last_grad_norm) > opt.grad_clip
+
+    def test_sgd_with_global_norm_clipping(self):
+        """The norm actor is optimizer-agnostic: SGD + clipping matches the
+        monolithic reference bitwise too."""
+        g = _train_graph()
+        params, data = _params_and_data(g, w_scale=0.5)
+        mesh = g.placement.to_mesh()
+        opt = OptimizerSpec.sgd(lr=1e-2, grad_clip=1.0)
+        mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
+                                     num_microbatches=4, optimizer=opt)
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=4, num_stages=4,
+                                        mesh=mesh, optimizer=opt)
+        ml, mg, mp = mono.step(dict(params), data)
+        pl, pg, pp = pipe.step(data)
+        assert bool(ml == pl)
+        for n in params:
+            assert bool(jnp.all(mg[n] == pg[n]))
+            assert bool(jnp.all(mp[n] == pp[n]))
+        assert pipe.opt_state is None and mono.opt_state is None
+
+    def test_adamw_unclipped_has_no_norm_actor(self):
+        """grad_clip=0 keeps the actor graph free of the sideways edge but
+        still trains stateful AdamW bit-identically."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        opt = OptimizerSpec.adamw(lr=1e-3, grad_clip=0.0)
+        mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
+                                     num_microbatches=4, optimizer=opt)
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=4, num_stages=4,
+                                        mesh=mesh, optimizer=opt)
+        for _ in range(2):
+            ml, mg, mp = mono.step(dict(pipe.params), data)
+            pl, pg, pp = pipe.step(data)
+            assert bool(ml == pl)
+            for n in params:
+                assert bool(jnp.all(mg[n] == pg[n]))
+                assert bool(jnp.all(mp[n] == pp[n]))
+        assert "norm" not in pipe.last_history
+        assert pipe.last_grad_norm is None
+
+    def test_reference_step_adamw_matches_monolithic(self):
+        """The sequential staged reference honors the program's
+        OptimizerSpec and agrees bitwise with the monolithic step."""
+        g = _train_graph()
+        params, data = _params_and_data(g, w_scale=0.5)
+        mesh = g.placement.to_mesh()
+        opt = OptimizerSpec.adamw(lr=1e-3, grad_clip=0.5)
+        p = plan(g)
+        part = partition_stages(g, num_stages=4)
+        ts = lower_train_stages(g, p, part, list(params), mesh=mesh,
+                                optimizer=opt)
+        mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
+                                     num_microbatches=4, optimizer=opt)
+        state = None
+        mono_params = dict(params)
+        ref_params = dict(params)
+        for _ in range(2):
+            ml, mg, mono_params = mono.step(mono_params, data)
+            rl, rg, ref_params, state = ts.reference_step(
+                {**ref_params, **data}, ["x", "labels"],
+                num_microbatches=4, opt_state=state)
+            assert bool(rl == ml)
+            for n in params:
+                assert bool(jnp.all(rg[n] == mg[n]))
+                assert bool(jnp.all(ref_params[n] == mono_params[n]))
+        _assert_states_equal(mono.opt_state, state, params)
+
+
+class TestStatePersistence:
+    def test_state_survives_across_step_calls(self):
+        """Criterion (b): the executor's per-stage AdamWState advances its
+        step counter and accumulates nonzero moments across steps."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        pipe = make_pipeline_train_step(
+            g, dict(params), ["x", "labels"], num_microbatches=4,
+            num_stages=4, mesh=mesh, optimizer=OptimizerSpec.adamw(lr=1e-3))
+        assert int(pipe.opt_state.step) == 0
+        for expected in (1, 2, 3):
+            pipe.step(data)
+            st = pipe.opt_state
+            assert int(st.step) == expected
+            assert pipe.step_count == expected
+            for n in params:
+                assert float(jnp.sum(jnp.abs(st.mu[n]))) > 0
+                assert float(jnp.sum(jnp.abs(st.nu[n]))) > 0
+
+    def test_state_actors_in_graph_and_training_progresses(self):
+        """Each step's actor graph contains one state{s} source per param
+        stage (the second register stream) and the loss decreases."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        pipe = make_pipeline_train_step(
+            g, dict(params), ["x", "labels"], num_microbatches=4,
+            num_stages=4, mesh=mesh,
+            optimizer=OptimizerSpec.adamw(lr=1e-2, grad_clip=1.0))
+        losses = []
+        for _ in range(4):
+            loss, _, _ = pipe.step(data)
+            losses.append(float(loss))
+            for s in range(4):
+                assert len(pipe.last_history[f"state{s}"]) == 1
+                assert len(pipe.last_history[f"opt{s}"]) == 1
+        assert losses[-1] < losses[0]
+
+    def test_reference_step_sgd_schedule_uses_step_index(self):
+        """Stateless SGD has no opt_state to carry the step count, so the
+        caller-provided step_index must drive the lr schedule."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        opt = OptimizerSpec.sgd(lr=lambda s: 1e-2 if s == 0 else 0.0)
+        p = plan(g)
+        part = partition_stages(g, num_stages=4)
+        ts = lower_train_stages(g, p, part, list(params), mesh=mesh,
+                                optimizer=opt)
+        _, _, after0, _ = ts.reference_step({**params, **data},
+                                            ["x", "labels"],
+                                            num_microbatches=4, step_index=0)
+        assert any(not np.array_equal(np.asarray(after0[n]), params[n])
+                   for n in params)
+        _, _, after1, _ = ts.reference_step({**after0, **data},
+                                            ["x", "labels"],
+                                            num_microbatches=4, step_index=1)
+        for n in params:    # lr(1) == 0 -> params frozen
+            assert np.array_equal(np.asarray(after1[n]),
+                                  np.asarray(after0[n]))
+
+    def test_lr_schedule_is_step_indexed(self):
+        """A schedule that zeroes the lr after step 0 freezes params from
+        step 1 on — proof the executor resolves lr at its step counter."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        pipe = make_pipeline_train_step(
+            g, dict(params), ["x", "labels"], num_microbatches=4,
+            num_stages=4, mesh=mesh,
+            optimizer=OptimizerSpec.sgd(lr=lambda s: 1e-2 if s == 0 else 0.0))
+        _, _, after0 = pipe.step(data)
+        assert any(not np.array_equal(np.asarray(after0[n]), params[n])
+                   for n in params)
+        _, _, after1 = pipe.step(data)
+        for n in params:
+            assert np.array_equal(np.asarray(after1[n]),
+                                  np.asarray(after0[n]))
+
+
+class TestNormActor:
+    def test_norm_actor_fires_once_and_broadcasts(self):
+        """Criterion (c): one norm firing per step, consuming every acc{s}
+        partial; every opt actor still fires exactly once."""
+        g = _train_graph()
+        params, data = _params_and_data(g, w_scale=0.5)
+        mesh = g.placement.to_mesh()
+        M, S = 8, 4
+        pipe = make_pipeline_train_step(
+            g, dict(params), ["x", "labels"], num_microbatches=M,
+            num_stages=S, mesh=mesh,
+            optimizer=OptimizerSpec.adamw(lr=1e-3, grad_clip=0.5))
+        for _ in range(2):
+            pipe.step(data)
+            assert len(pipe.last_history["norm"]) == 1
+            for s in range(S):
+                assert len(pipe.last_history[f"acc{s}"]) == M
+                assert len(pipe.last_history[f"opt{s}"]) == 1
+            assert float(pipe.last_grad_norm) > 0
+
+    def test_quota_still_bounds_inflight_with_optimizer_actors(self):
+        """The sideways norm edge must not break the 1F1B back-pressure."""
+        g = _train_graph()
+        params, data = _params_and_data(g)
+        mesh = g.placement.to_mesh()
+        S, M = 4, 8
+        for regs in ([1] * S, [S - s for s in range(S)]):
+            pipe = make_pipeline_train_step(
+                g, dict(params), ["x", "labels"], num_microbatches=M,
+                num_stages=S, mesh=mesh, regs=regs,
+                optimizer=OptimizerSpec.adamw(lr=1e-3, grad_clip=1.0))
+            pipe.step(data)
+            for s in range(S):
+                assert pipe.last_peak_regs[f"f{s}"] <= regs[s]
+
+
+class TestFp32Accumulation:
+    def _bf16_graph(self):
+        placement = Placement(("d",), (1,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (8, 16))
+        labels = g.input("labels", (8,), dtype="int32")
+        w0 = g.input("w0", (16, 16), dtype="bfloat16")
+        w1 = g.input("w1", (16, 16), dtype="bfloat16")
+        with g.stage(0):
+            h = g.unary(g.matmul(x, w0, name="mm0"), "relu", name="relu0")
+        with g.stage(1):
+            h = g.matmul(h, w1, name="mm1")
+            g.softmax_xent(h, labels, name="loss")
+        return g
+
+    @pytest.mark.parametrize("opt", [
+        OptimizerSpec.sgd(lr=1e-2, grad_clip=1.0),
+        OptimizerSpec.adamw(lr=1e-3, grad_clip=1.0),
+    ], ids=["sgd", "adamw"])
+    def test_bf16_grads_accumulate_in_fp32_bit_identical(self, opt):
+        """Criterion (d): with bf16 params (hence bf16 per-microbatch
+        gradients from the backward) the acc actors accumulate in fp32 and
+        the whole step stays bit-identical to the monolithic reference."""
+        g = self._bf16_graph()
+        rng = np.random.default_rng(1)
+        params = {n: jnp.asarray(rng.normal(size=(16, 16)) * 0.1,
+                                 jnp.bfloat16) for n in ("w0", "w1")}
+        data = {"x": rng.normal(size=(8, 16)).astype(np.float32),
+                "labels": rng.integers(0, 16, size=(8,)).astype(np.int32)}
+        mesh = g.placement.to_mesh()
+        mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
+                                     num_microbatches=4, optimizer=opt)
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=4, mesh=mesh,
+                                        optimizer=opt)
+        mp = dict(params)
+        for step in range(2):
+            ml, mg, mp = mono.step(mp, data)
+            pl, pg, pp = pipe.step(data)
+            assert bool(ml == pl), f"step {step}"
+            for n in params:
+                # fp32 accumulation is the contract, not just a detail
+                assert pg[n].dtype == jnp.float32
+                assert pp[n].dtype == jnp.bfloat16
+                assert bool(jnp.all(mg[n] == pg[n])), f"{n} step {step}"
+                assert bool(jnp.all(mp[n] == pp[n])), f"{n} step {step}"
+
+
+class TestExecutorValidation:
+    def test_peak_inflight_is_zero_before_first_step(self):
+        """Criterion (e): no KeyError/ValueError on an executor that has
+        not run yet."""
+        g = _train_graph()
+        params, _ = _params_and_data(g)
+        pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                        num_microbatches=4, num_stages=4,
+                                        mesh=g.placement.to_mesh())
+        assert pipe.peak_inflight_activations == 0
+
+    def test_invalid_num_microbatches_rejected_at_construction(self):
+        g = _train_graph()
+        params, _ = _params_and_data(g)
+        with pytest.raises(ValueError, match="num_microbatches"):
+            make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                     num_microbatches=0, num_stages=4,
+                                     mesh=g.placement.to_mesh())
+
+    def test_wrong_regs_length_rejected_at_construction(self):
+        g = _train_graph()
+        params, _ = _params_and_data(g)
+        with pytest.raises(ValueError, match="register quotas"):
+            make_pipeline_train_step(g, dict(params), ["x", "labels"],
+                                     num_microbatches=4, num_stages=4,
+                                     mesh=g.placement.to_mesh(),
+                                     regs=[1, 1])
+
+    def test_unknown_microbatch_input_rejected_at_construction(self):
+        g = _train_graph()
+        params, _ = _params_and_data(g)
+        with pytest.raises(ValueError, match="not a graph input"):
+            make_pipeline_train_step(g, dict(params), ["nope"],
+                                     num_microbatches=4, num_stages=4,
+                                     mesh=g.placement.to_mesh())
+
+    def test_unknown_optimizer_kind_rejected(self):
+        with pytest.raises(ValueError, match="optimizer kind"):
+            OptimizerSpec(kind="rmsprop")
