@@ -1,6 +1,10 @@
-"""Runnable examples. Each script inserts ``src/`` on ``sys.path`` itself, so
-both invocations work from the repo root:
+"""Runnable examples. Each script imports :mod:`examples._bootstrap` first
+(``src/`` on ``sys.path`` + 8 virtual CPU devices), so both invocations work
+from the repo root:
 
     python examples/<name>.py
     python -m examples.<name>
+
+The pipeline examples all go through the :mod:`repro.api` frontend — one
+``api.compile(graph, ...)`` call per Session, whatever the mode/backend.
 """

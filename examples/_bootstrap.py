@@ -1,0 +1,21 @@
+"""Shared example bootstrap — import this FIRST in every example.
+
+Makes a source checkout runnable without installation (puts ``src/`` on
+``sys.path``) and defaults to 8 virtual CPU devices so the multi-device
+examples work on a laptop (must happen before jax is imported). Import it
+with the two-form dance that keeps both invocations working::
+
+    try:
+        from examples import _bootstrap  # noqa: F401  (python -m examples.foo)
+    except ImportError:
+        import _bootstrap  # noqa: F401  (python examples/foo.py)
+"""
+import os
+import pathlib
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

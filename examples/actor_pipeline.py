@@ -1,28 +1,27 @@
 """Actor-driven pipeline execution of a compiled physical program (§4.3).
 
-The missing seam of the reproduction, now wired: the SBP compiler cuts the
-logical graph into stages and lowers each to its own jitted program; the
-actor runtime's register quotas alone turn those stage callables into a
-pipelined, back-pressured executor — no scheduler in sight.
+One `api.compile` call cuts the logical graph into stages, lowers each to
+its own jitted program, and wires the actor runtime whose register quotas
+alone turn those stage callables into a pipelined, back-pressured executor —
+no scheduler in sight. The same call with `backend="monolithic"` produces
+the whole-graph reference Session; `regs=` switches the schedule
+declaratively ("serial", "1f1b", "gpipe", or an explicit quota list).
 
-Run:  PYTHONPATH=src python examples/actor_pipeline.py
+Run (either form works from the repo root):
+
+    python examples/actor_pipeline.py
+    python -m examples.actor_pipeline
 """
-import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+try:
+    from examples import _bootstrap  # noqa: F401  (python -m examples.actor_pipeline)
+except ImportError:
+    import _bootstrap  # noqa: F401  (python examples/actor_pipeline.py)
 
 import numpy as np
 
-from repro.core.graph import LogicalGraph, partition_stages
-from repro.core.lowering import lower_plan, lower_stages
+from repro import api
+from repro.core.graph import LogicalGraph
 from repro.core.placement import Placement
-from repro.core.planner import plan
-from repro.runtime import ActorPipelineExecutor
 
 STAGES, MICROBATCHES = 4, 8
 
@@ -42,9 +41,6 @@ def main():
     import jax
 
     g = build()
-    p = plan(g)
-    part = partition_stages(g, num_stages=STAGES)
-    print(part.describe(g))
 
     # one device per stage: the paper's MPMD placement
     devs = jax.devices()
@@ -55,27 +51,33 @@ def main():
             f"--xla_force_host_platform_device_count={STAGES} or more")
     stage_meshes = [g.placement.to_mesh(devices=[devs[s]])
                     for s in range(STAGES)]
-    staged = lower_stages(g, p, part, stage_meshes=stage_meshes)
-    for st in staged.stages:
-        print(f"  stage {st.index}: {list(st.input_names)} -> "
-              f"{list(st.output_names)}  on {devs[st.index]}")
 
     rng = np.random.default_rng(0)
     inputs = {t.name: rng.normal(size=t.shape).astype(np.float32)
               for t in g.inputs}
 
-    mono = lower_plan(g, p, g.placement.to_mesh(devices=[devs[0]]))
-    ref = np.asarray(mono(*(inputs[t.name] for t in g.inputs))[0])
+    mono = api.compile(g, mode="infer", backend="monolithic",
+                       num_microbatches=MICROBATCHES, microbatch_inputs=["x"],
+                       mesh=g.placement.to_mesh(devices=[devs[0]]))
+    ref = mono.run(**inputs)["relu3.out"]
 
-    for label, regs in (("serialized (R=1)", [1] * STAGES),
-                        ("1F1B quota     ", [STAGES - s for s in range(STAGES)])):
-        ex = ActorPipelineExecutor(staged, ["x"], MICROBATCHES, regs=regs)
-        got = ex.run(inputs)       # first run includes jit compile
-        got = ex.run(inputs)
-        ok = np.array_equal(got[0], ref) or np.allclose(got[0], ref, rtol=1e-4)
-        print(f"{label}: makespan {ex.last_makespan * 1e3:7.1f} ms   "
+    for label, regs in (("serialized (R=1)", "serial"),
+                        ("1F1B quota     ", "1f1b")):
+        sess = api.compile(g, mode="infer", backend="actors", stages=STAGES,
+                           num_microbatches=MICROBATCHES,
+                           microbatch_inputs=["x"], regs=regs,
+                           stage_meshes=stage_meshes)
+        if regs == "serial":
+            print(sess.describe())
+            for st in sess.executor.staged.stages:
+                print(f"  stage {st.index}: {list(st.input_names)} -> "
+                      f"{list(st.output_names)}  on {devs[st.index]}")
+        got = sess.run(**inputs)       # first run includes jit compile
+        got = sess.run(**inputs)["relu3.out"]
+        ok = np.array_equal(got, ref) or np.allclose(got, ref, rtol=1e-4)
+        print(f"{label}: makespan {sess.last_makespan * 1e3:7.1f} ms   "
               f"matches monolithic: {ok}")
-        spans = ex.last_history
+        spans = sess.executor.last_history
         for s in range(STAGES):
             hist = spans[f"stage{s}"]
             busy = sum(e - b for b, e in hist)

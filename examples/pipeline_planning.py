@@ -1,11 +1,15 @@
 """Actor-runtime examples: Fig-6 pipelining, Fig-2 resource safety, and
 compile-time register planning for a 1F1B pipeline (§4.3).
 
-    PYTHONPATH=src python examples/pipeline_planning.py
-"""
-import sys
+Run (either form works from the repo root):
 
-sys.path.insert(0, "src")
+    python examples/pipeline_planning.py
+    python -m examples.pipeline_planning
+"""
+try:
+    from examples import _bootstrap  # noqa: F401  (python -m examples.pipeline_planning)
+except ImportError:
+    import _bootstrap  # noqa: F401  (python examples/pipeline_planning.py)
 
 from repro.runtime import ActorSpec, CommModel, simulate
 from repro.runtime.pipeline import analyze, plan_registers

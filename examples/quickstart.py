@@ -1,28 +1,29 @@
-"""Quickstart: the paper's Table-4 program in this framework.
+"""Quickstart: the paper's Table-4 program, then `repro.api` in one breath.
 
-Shows the three layers of the reproduction:
-  1. GlobalTensor + SBP signatures + to_global (the user API),
-  2. the planner choosing signatures by Table-2 cost,
-  3. the lowered physical program (explicit boxing collectives).
+Shows the layers of the reproduction:
+  1. GlobalTensor + SBP signatures + to_global (the eager user API),
+  2. a LogicalGraph compiled with `repro.api.compile` — ONE call that picks
+     the SBP plan, cuts pipeline stages, plans register quotas, and returns
+     a Session (the framework decides how to lower and run, paper §2/§4),
+  3. the same Session surface over the monolithic whole-graph program,
+     bit-identical to the actor pipeline (`api.assert_sessions_match`).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run (either form works from the repo root):
+
+    python examples/quickstart.py
+    python -m examples.quickstart
 """
-import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+try:
+    from examples import _bootstrap  # noqa: F401  (python -m examples.quickstart)
+except ImportError:
+    import _bootstrap  # noqa: F401  (python examples/quickstart.py)
 
 import numpy as np
 
+from repro import api
 from repro.core.global_tensor import GlobalTensor, matmul
 from repro.core.graph import LogicalGraph
-from repro.core.lowering import lower_plan
 from repro.core.placement import Placement
-from repro.core.planner import plan
 
 
 def table4_program():
@@ -49,8 +50,10 @@ def table4_program():
     print("Y1 logical value:\n", Y1.numpy()[:2])
 
 
-def planner_demo():
-    """The compiler picks megatron-style signatures for an MLP by itself."""
+def compile_demo():
+    """One logical graph, one compile call, one Session — whatever the
+    backend. The planner picks megatron-style signatures for the MLP; the
+    stage partition, register quotas, and executor come from compile()."""
     placement = Placement(("data", "model"), (2, 4), device_kind="cpu")
     g = LogicalGraph(placement)
     x = g.input("x", (64, 128), sbp="S(0),B")
@@ -59,20 +62,26 @@ def planner_demo():
     h = g.matmul(x, w1, name="mm1")
     a = g.unary(h, "relu", name="relu")
     y = g.matmul(a, w2, name="mm2")
-    p = plan(g)
-    print("\n" + p.describe())
 
-    prog = lower_plan(g, p, placement.to_mesh())
+    # actor-pipelined and monolithic sessions from the same graph
+    pipe = api.compile(g, mode="infer", backend="actors", stages=2,
+                       num_microbatches=4, microbatch_inputs=["x"])
+    mono = api.compile(g, mode="infer", backend="monolithic",
+                       num_microbatches=4, microbatch_inputs=["x"])
+    print("\n" + pipe.describe())
+
     rng = np.random.default_rng(1)
-    xv = rng.normal(size=(64, 128)).astype(np.float32)
-    w1v = rng.normal(size=(128, 512)).astype(np.float32)
-    w2v = rng.normal(size=(512, 128)).astype(np.float32)
-    out = np.asarray(prog(xv, w1v, w2v)[0])  # programs return a sink tuple
-    ref = np.maximum(xv @ w1v, 0) @ w2v
+    inputs = {"x": rng.normal(size=(64, 128)).astype(np.float32),
+              "w1": rng.normal(size=(128, 512)).astype(np.float32),
+              "w2": rng.normal(size=(512, 128)).astype(np.float32)}
+    out = pipe.run(**inputs)[y.name]
+    ref = np.maximum(inputs["x"] @ inputs["w1"], 0) @ inputs["w2"]
     print("physical == logical:",
           np.allclose(out, ref, rtol=1e-3, atol=1e-2))  # fp32 sum order
+    api.assert_sessions_match(pipe, mono, inputs)
+    print("actors == monolithic: bit-identical")
 
 
 if __name__ == "__main__":
     table4_program()
-    planner_demo()
+    compile_demo()

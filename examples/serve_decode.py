@@ -1,14 +1,16 @@
 """Serving example: batched prefill + greedy decode with a seq-sharded KV
 cache (GQA) or latent cache (MLA).
 
-    PYTHONPATH=src python examples/serve_decode.py --arch deepseek-v2-lite-16b
-    PYTHONPATH=src python examples/serve_decode.py --arch jamba-v0.1-52b
+    python examples/serve_decode.py --arch deepseek-v2-lite-16b
+    python -m examples.serve_decode --arch jamba-v0.1-52b
 """
-import argparse
-import sys
-import time
+try:
+    from examples import _bootstrap  # noqa: F401  (python -m examples.serve_decode)
+except ImportError:
+    import _bootstrap  # noqa: F401  (python examples/serve_decode.py)
 
-sys.path.insert(0, "src")
+import argparse
+import time
 
 
 def main():

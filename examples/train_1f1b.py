@@ -1,31 +1,28 @@
 """1F1B pipeline-parallel *training* from register quotas (§4.3, §6.5).
 
-The compiler cuts an MLP+softmax-xent training graph into stages and lowers
-forward/backward/optimizer programs per stage (backward via per-stage
-``jax.vjp``); the actor runtime streams microbatches through fwd and bwd
-stage actors. No schedule table anywhere: the forward out-register quota
-``R[s] = S - s`` alone produces the 1F1B overlap, and the same graph with
-``R = 1`` runs fully serialized — bit-identical numbers either way.
+Two `api.compile` calls on the same logical graph — `backend="actors"` and
+`backend="monolithic"` — give two Sessions with the same `step()` surface.
+The actor one cuts the graph into stages, differentiates each with a
+per-stage ``jax.vjp``, and streams microbatches through fwd/bwd stage
+actors; no schedule table anywhere — the forward out-register quota
+``R[s] = S - s`` alone produces the 1F1B overlap, and `regs="serial"` runs
+the same graph fully serialized. Bit-identical numbers either way.
 
 Run (either form works from the repo root):
 
     python examples/train_1f1b.py
     python -m examples.train_1f1b
 """
-import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+try:
+    from examples import _bootstrap  # noqa: F401  (python -m examples.train_1f1b)
+except ImportError:
+    import _bootstrap  # noqa: F401  (python examples/train_1f1b.py)
 
 import numpy as np
 
+from repro import api
 from repro.core.graph import LogicalGraph
 from repro.core.placement import Placement
-from repro.train.steps import make_graph_train_step, make_pipeline_train_step
 
 STAGES, MICROBATCHES, BATCH, WIDTH = 4, 8, 64, 128
 STEPS = 5
@@ -53,32 +50,31 @@ def main():
     data = {"x": rng.normal(size=(BATCH, WIDTH)).astype(np.float32),
             "labels": rng.integers(0, WIDTH, size=(BATCH,)).astype(np.int32)}
 
-    mesh = g.placement.to_mesh()
-    mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
-                                 MICROBATCHES)
-    pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
-                                    MICROBATCHES, num_stages=STAGES,
-                                    mesh=mesh)
-
-    print(pipe.tstaged.partition.describe(g))
-    for st in pipe.tstaged.stages:
+    mono = api.compile(g, mode="train", backend="monolithic",
+                       params=dict(params), num_microbatches=MICROBATCHES)
+    pipe = api.compile(g, mode="train", backend="actors", stages=STAGES,
+                       params=dict(params), num_microbatches=MICROBATCHES,
+                       regs="1f1b")
+    print(pipe.describe())
+    for st in pipe.executor.tstaged.stages:
         print(f"  stage {st.index}: fwd {list(st.input_names)} -> "
               f"{list(st.output_names)}; params {list(st.param_names)}")
 
-    mono_params = dict(params)
     for step in range(STEPS):
-        ml, mg, mono_params = mono.step(mono_params, data)
-        pl, pg, _ = pipe.step(data)
-        bit = (ml == pl) and all(bool(np.all(np.asarray(mg[n]) ==
-                                             np.asarray(pg[n])))
-                                 for n in params)
-        print(f"step {step}: loss {float(pl):10.4f}   "
-              f"makespan {pipe.last_makespan * 1e3:6.1f} ms   "
-              f"peak in-flight {pipe.peak_inflight_activations}   "
+        mres = mono.step(**data)
+        pres = pipe.step(**data)
+        bit = (mres.loss == pres.loss) and all(
+            bool(np.all(np.asarray(mres.grads[n]) ==
+                        np.asarray(pres.grads[n])))
+            for n in params)
+        print(f"step {step}: loss {float(pres.loss):10.4f}   "
+              f"makespan {pres.metrics['makespan'] * 1e3:6.1f} ms   "
+              f"peak in-flight {pres.metrics['peak_inflight']}   "
               f"bit-identical to monolithic: {bool(bit)}")
     print("(loss falls, the pipeline and the monolithic step agree bitwise; "
-          "benchmarks/bench_1f1b_train.py adds emulated device latency and "
-          "shows the 1F1B speedup over the serialized R=1 quota)")
+          "api.assert_sessions_match(pipe, mono, data, steps=N) is the "
+          "one-liner form; benchmarks/bench_1f1b_train.py adds emulated "
+          "device latency and shows the 1F1B speedup over serialized)")
 
 
 if __name__ == "__main__":

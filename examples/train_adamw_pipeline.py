@@ -1,15 +1,15 @@
-"""Stateful AdamW 1F1B pipeline with cross-stage global-norm clipping (PR 3).
+"""Stateful AdamW 1F1B pipeline with cross-stage global-norm clipping.
 
-Extends examples/train_1f1b.py with the optimizer subsystem: each stage's
-``opt{s}`` actor consumes three register streams — the summed gradients from
-``acc{s}``, the persistent AdamW state from ``state{s}`` (step count + first
-and second moments, surviving across ``step()`` calls), and the broadcast
-clip scale from the ``norm`` actor, which sums every stage's squared-norm
-partials (OneFlow's P→B boxing expressed as an actor — the first *sideways*
-cross-stage edge in this repo). The lr schedule is a step-indexed callable
-resolved on the host once per step.
+The optimizer subsystem through the `repro.api` frontend: pass an
+`OptimizerSpec` to `api.compile` and each stage's ``opt{s}`` actor consumes
+three register streams — the summed gradients from ``acc{s}``, the
+persistent AdamW state from ``state{s}`` (step count + moments, surviving
+across ``step()`` calls on the Session), and the broadcast clip scale from
+the ``norm`` actor, which sums every stage's squared-norm partials
+(OneFlow's P→B boxing expressed as an actor). The lr schedule is a
+step-indexed callable resolved on the host once per step.
 
-Every step is checked bit-identical to the monolithic AdamW reference:
+Every step is checked bit-identical to the monolithic AdamW Session:
 same loss, same post-clip gradients, same params, same AdamWState.
 
 Run (either form works from the repo root):
@@ -17,21 +17,17 @@ Run (either form works from the repo root):
     python examples/train_adamw_pipeline.py
     python -m examples.train_adamw_pipeline
 """
-import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+try:
+    from examples import _bootstrap  # noqa: F401  (python -m examples.train_adamw_pipeline)
+except ImportError:
+    import _bootstrap  # noqa: F401  (python examples/train_adamw_pipeline.py)
 
 import numpy as np
 
+from repro import api
 from repro.core.graph import LogicalGraph
 from repro.core.lowering import OptimizerSpec
 from repro.core.placement import Placement
-from repro.train.steps import make_graph_train_step, make_pipeline_train_step
 
 STAGES, MICROBATCHES, BATCH, WIDTH = 4, 8, 64, 128
 STEPS = 5
@@ -61,33 +57,30 @@ def main():
 
     opt = OptimizerSpec.adamw(lr=lambda step: 1e-3 * (0.9 ** step),
                               grad_clip=1.0)
-    mesh = g.placement.to_mesh()
-    mono = make_graph_train_step(g, mesh, list(params), ["x", "labels"],
-                                 MICROBATCHES, optimizer=opt)
-    pipe = make_pipeline_train_step(g, dict(params), ["x", "labels"],
-                                    MICROBATCHES, num_stages=STAGES,
-                                    mesh=mesh, optimizer=opt)
+    mono = api.compile(g, mode="train", backend="monolithic",
+                       params=dict(params), num_microbatches=MICROBATCHES,
+                       optimizer=opt)
+    pipe = api.compile(g, mode="train", backend="actors", stages=STAGES,
+                       params=dict(params), num_microbatches=MICROBATCHES,
+                       optimizer=opt)
+    print(pipe.describe())
 
-    print(pipe.tstaged.partition.describe(g))
-    print(f"optimizer: {opt.kind}, grad_clip={opt.grad_clip}, "
-          f"lr(0)={opt.lr_at(0):.2e} decaying 0.9x/step")
-
-    mono_params = dict(params)
     for step in range(STEPS):
-        ml, mg, mono_params = mono.step(mono_params, data)
-        pl, pg, _ = pipe.step(data)
+        mres = mono.step(**data)
+        pres = pipe.step(**data)
         st = pipe.opt_state
-        bit = (ml == pl) and all(bool(np.all(np.asarray(mg[n]) ==
-                                             np.asarray(pg[n])))
-                                 for n in params)
-        print(f"step {step}: loss {float(pl):10.4f}   "
-              f"grad norm {float(pipe.last_grad_norm):9.1f} (clipped to "
-              f"{opt.grad_clip})   adamw step {int(st.step)}   "
-              f"|mu| {sum(float(np.abs(np.asarray(st.mu[n])).sum()) for n in params):8.3f}   "
+        bit = (mres.loss == pres.loss) and all(
+            bool(np.all(np.asarray(mres.grads[n]) ==
+                        np.asarray(pres.grads[n])))
+            for n in params)
+        print(f"step {step}: loss {float(pres.loss):10.4f}   "
+              f"grad norm {float(pres.metrics['grad_norm']):9.1f} (clipped to "
+              f"{opt.grad_clip})   lr {pres.metrics['lr']:.2e}   "
+              f"adamw step {int(st.step)}   "
               f"bit-identical: {bool(bit)}")
     print("(the norm actor sums per-stage squared-norm partials and "
           "broadcasts one clip scale to every opt actor; AdamW state rides "
-          "its own register stream and persists across steps)")
+          "its own register stream and persists across Session steps)")
 
 
 if __name__ == "__main__":

@@ -2,17 +2,19 @@
 ZeRO/FSDP optimizer sharding, and checkpointing.
 
 CPU demo (a ~15M-param qwen3-family model, loss must drop):
-    PYTHONPATH=src python examples/train_lm.py
+    python examples/train_lm.py
 
 ~100M model, a few hundred steps (hours on 1 CPU core; minutes on devices):
-    PYTHONPATH=src python examples/train_lm.py --d-model 512 --layers 8 \
+    python examples/train_lm.py --d-model 512 --layers 8 \
         --steps 300 --batch 8 --seq 256
 """
+try:
+    from examples import _bootstrap  # noqa: F401  (python -m examples.train_lm)
+except ImportError:
+    import _bootstrap  # noqa: F401  (python examples/train_lm.py)
+
 import argparse
 import dataclasses
-import sys
-
-sys.path.insert(0, "src")
 
 
 def main():

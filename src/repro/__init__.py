@@ -1,0 +1,26 @@
+"""repro — an OneFlow-style distributed deep-learning stack on jax.
+
+The public surface is :mod:`repro.api`: build a
+:class:`~repro.core.graph.LogicalGraph` with placement + SBP annotations,
+then ``api.compile(graph, ...)`` returns a :class:`~repro.api.Session`
+whatever the mode (infer/train) or backend (actors/monolithic)::
+
+    from repro import api
+    sess = api.compile(g, mode="train", params=init_params,
+                       num_microbatches=8)
+    res = sess.step(**batch)
+
+Everything else (``repro.core``, ``repro.runtime``, ``repro.train``, ...)
+is the machinery underneath — importable, but :mod:`repro.api` is the entry
+point new features hang options off.
+"""
+from repro import api
+from repro.api import (Session, StepResult, assert_sessions_match, compile)
+from repro.core.graph import LogicalGraph, partition_stages
+from repro.core.lowering import OptimizerSpec
+from repro.core.placement import Placement
+
+__all__ = [
+    "api", "Session", "StepResult", "assert_sessions_match", "compile",
+    "LogicalGraph", "partition_stages", "OptimizerSpec", "Placement",
+]

@@ -1,0 +1,609 @@
+"""repro.api — the single compile/run frontend (paper §2, §4).
+
+OneFlow's central usability claim: the user writes ONE logical graph with
+placement and SBP annotations, and a single compile step produces the
+runnable artifact — the framework, not the user, decides how to lower and
+execute it. This module is that frontend for the reproduction. The four
+historical entry paths (``lower_plan``, ``lower_stages`` +
+``ActorPipelineExecutor``, ``make_graph_train_step``,
+``make_pipeline_train_step`` + ``TrainPipelineExecutor``) are all reachable
+through one call::
+
+    from repro import api
+
+    sess = api.compile(g, mode="train", params=init_params,
+                       num_microbatches=8,
+                       optimizer=OptimizerSpec.adamw(grad_clip=1.0))
+    for batch in batches:
+        res = sess.step(**batch)          # StepResult(loss, metrics, ...)
+    sess.params, sess.opt_state, print(sess.describe())
+
+Every option is declarative and inferred when omitted: ``plan`` via
+:func:`repro.core.planner.plan`, the stage ``partition`` via
+:func:`repro.core.graph.partition_stages` (user ``g.stage(k)`` annotations or
+cost-balanced), register quotas via
+:func:`repro.runtime.pipeline.plan_registers` (the paper's compile-time
+resource planning, §2.3), ``microbatch_inputs`` as the non-param graph
+inputs in train mode.
+
+``backend="actors"`` runs stages as actors on the threaded runtime (1F1B
+emerging from register quotas, §4.3/§6.5); ``backend="monolithic"`` runs the
+same :class:`Session` surface over whole-graph jitted programs
+(``lower_plan`` / ``lower_train_plan``) with identical microbatch chunking,
+so pipeline-vs-monolithic bit-identity checks are one-liners
+(:func:`assert_sessions_match`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import (LogicalGraph, StagePartition, partition_stages)
+from repro.core.lowering import (OptimizerSpec, lower_plan, lower_stages,
+                                 lower_train_plan, lower_train_stages,
+                                 reassemble_sinks, split_microbatches)
+from repro.core.planner import Plan, plan as plan_sbp
+from repro.runtime.pipeline import (ActorPipelineExecutor, PipelinePlan,
+                                    TrainPipelineExecutor, check_run_inputs,
+                                    plan_registers)
+
+MODES = ("infer", "train")
+BACKENDS = ("actors", "monolithic")
+
+#: named register-quota policies accepted by ``compile(regs=...)`` — the
+#: paper's schedules as declarative one-words instead of hand-built lists
+REG_POLICIES = ("1f1b", "gpipe", "serial")
+
+
+@dataclasses.dataclass
+class StepResult:
+    """One training step's outcome, uniform across backends.
+
+    ``metrics`` always carries ``step`` (0-based index of the step just
+    taken), ``lr`` (the schedule resolved at that step), and ``grad_norm``
+    (pre-clip global norm; None when clipping is off). Actor-backend sessions
+    add ``makespan`` (wall-clock seconds) and ``peak_inflight`` (peak forward
+    registers in use — the in-flight microbatch count the quota bounds).
+    """
+
+    loss: Any
+    metrics: Dict[str, Any]
+    grads: Dict[str, Any]
+    params: Dict[str, Any]
+
+
+def _canonical_params(graph: LogicalGraph, params: Dict[str, Any]
+                      ) -> Dict[str, Any]:
+    """Reorder a param dict into graph-input order — the canonical order
+    both backends use for the global-norm sum, so clipping is bit-identical
+    no matter how the caller built the dict."""
+    input_names = [t.name for t in graph.inputs]
+    unknown = sorted(set(params) - set(input_names))
+    if unknown:
+        raise ValueError(f"params entries are not graph inputs: {unknown}")
+    return {n: params[n] for n in input_names if n in params}
+
+
+class _MonolithicInferEngine:
+    """``backend="monolithic"`` inference: one whole-graph jitted program
+    (:func:`repro.core.lowering.lower_plan`), run once per microbatch chunk
+    with the same :func:`split_microbatches` chunking as the actor pipeline
+    so the two backends agree bitwise."""
+
+    def __init__(self, graph: LogicalGraph, plan: Plan, mesh,
+                 microbatch_inputs: Sequence[str], num_microbatches: int):
+        self.graph = graph
+        self.program = lower_plan(graph, plan, mesh)
+        self.input_names = [t.name for t in graph.inputs]
+        self.microbatch_inputs = list(microbatch_inputs)
+        self.num_microbatches = num_microbatches
+        for n in self.microbatch_inputs:
+            if n not in self.input_names:
+                raise ValueError(f"{n} is not a graph input")
+        self.last_makespan: Optional[float] = None
+
+    def run(self, inputs: Dict[str, Any], timeout: float = 0.0) -> Tuple:
+        check_run_inputs(inputs, self.input_names)
+        t0 = time.perf_counter()
+        if not self.microbatch_inputs:
+            chunks = [dict(inputs)]
+        else:
+            chunks = split_microbatches(inputs, self.microbatch_inputs,
+                                        self.num_microbatches)
+        mb = set(self.microbatch_inputs)
+        sink_names = [t.name for t in self.program.sinks]
+        per_chunk = [
+            dict(zip(sink_names,
+                     self.program(*(c[n] if n in mb else inputs[n]
+                                    for n in self.input_names))))
+            for c in chunks]
+        results = reassemble_sinks(self.graph, self.program.sinks,
+                                   self.microbatch_inputs, per_chunk)
+        self.last_makespan = time.perf_counter() - t0
+        return results
+
+
+class _MonolithicTrainEngine:
+    """``backend="monolithic"`` training: whole-graph value-and-grad
+    (:func:`repro.core.lowering.lower_train_plan`) with the exact microbatch
+    chunking, fp32 accumulation, canonical-order global-norm clipping, and
+    :class:`OptimizerSpec` kernels of the actor pipeline — the reference its
+    numbers are checked against, owned by the same :class:`Session` surface.
+    """
+
+    def __init__(self, graph: LogicalGraph, plan: Plan, mesh,
+                 params: Dict[str, Any], microbatch_inputs: Sequence[str],
+                 num_microbatches: int, optimizer: OptimizerSpec,
+                 loss=None):
+        self.graph = graph
+        self.params = _canonical_params(graph, params)
+        self.param_names = tuple(self.params)
+        self.vg = lower_train_plan(graph, plan, mesh, list(self.param_names),
+                                   loss=loss)
+        self.input_names = [t.name for t in graph.inputs]
+        self.microbatch_inputs = list(microbatch_inputs)
+        self.num_microbatches = num_microbatches
+        self.optimizer = optimizer
+        self.opt_state = None
+        self.step_count = 0
+        self.last_grad_norm = None
+        self.last_makespan: Optional[float] = None
+
+    def load_params(self, params: Dict[str, Any]) -> None:
+        missing = [n for n in self.param_names if n not in params]
+        if missing:
+            raise ValueError(f"missing params: {missing}")
+        self.params = {n: params[n] for n in self.param_names}
+
+    def step(self, data_inputs: Dict[str, Any], timeout: float = 0.0):
+        import jax.numpy as jnp
+
+        from repro.optim.adamw import (clip_scale, global_norm_from_partials,
+                                       scale_grad, sqnorm_partials)
+
+        check_run_inputs(
+            data_inputs,
+            [n for n in self.input_names if n not in self.params],
+            owned=self.param_names)
+        t0 = time.perf_counter()
+        chunks = split_microbatches(data_inputs, self.microbatch_inputs,
+                                    self.num_microbatches)
+        mb = set(self.microbatch_inputs)
+        loss_total, grads = None, None
+        for chunk in chunks:
+            vals = [chunk[n] if n in mb
+                    else (self.params[n] if n in self.params
+                          else data_inputs[n])
+                    for n in self.input_names]
+            loss_vec, g = self.vg(*vals)
+            ls = jnp.sum(loss_vec)
+            loss_total = ls if loss_total is None else loss_total + ls
+            g32 = [x.astype(jnp.float32) for x in g]
+            grads = (g32 if grads is None
+                     else [a + b for a, b in zip(grads, g32)])
+        gdict = dict(zip(self.param_names, grads))
+        opt = self.optimizer
+        if opt.grad_clip:
+            norm = global_norm_from_partials(sqnorm_partials(gdict),
+                                             self.param_names)
+            scale = clip_scale(norm, opt.grad_clip)
+            gdict = {n: scale_grad(g, scale) for n, g in gdict.items()}
+            self.last_grad_norm = norm
+        if opt.stateful and self.opt_state is None:
+            self.opt_state = opt.init_state(dict(self.params))
+        new_params, self.opt_state = opt.update(
+            dict(self.params), gdict, self.opt_state,
+            opt.lr_at(self.step_count))
+        self.params = new_params
+        self.step_count += 1
+        self.last_makespan = time.perf_counter() - t0
+        return loss_total, gdict, dict(self.params)
+
+
+class Session:
+    """The uniform run/step surface every compile path returns.
+
+    * ``mode="infer"``: :meth:`run` maps graph-input values to a dict of
+      sink values (named by sink tensor).
+    * ``mode="train"``: :meth:`step` takes the non-param inputs and returns
+      a :class:`StepResult`; the session owns ``params`` and any optimizer
+      state across steps.
+
+    ``describe()`` reports the SBP plan, the stage partition with register
+    quotas, and the simulated register plan (building on
+    :meth:`repro.core.graph.StagePartition.describe`) — the compiled
+    artifact, human-readable. ``history`` accumulates one record per
+    :meth:`run`/:meth:`step` call.
+
+    Sessions are built by :func:`compile`, never directly.
+    """
+
+    def __init__(self, *, graph: LogicalGraph, mode: str, backend: str,
+                 engine, plan: Plan, partition: Optional[StagePartition],
+                 regs: Optional[List[int]], reg_plan: Optional[PipelinePlan],
+                 optimizer: Optional[OptimizerSpec],
+                 microbatch_inputs: List[str], num_microbatches: int,
+                 timeout: float = 300.0):
+        self.graph = graph
+        self.mode = mode
+        self.backend = backend
+        self.plan = plan
+        self.partition = partition
+        self.regs = regs
+        self.reg_plan = reg_plan
+        self.optimizer = optimizer
+        self.microbatch_inputs = microbatch_inputs
+        self.num_microbatches = num_microbatches
+        self.timeout = timeout
+        self.history: List[Dict[str, Any]] = []
+        self._engine = engine
+        self._sinks = graph.sinks()
+
+    # -- the executor/engine underneath, for callers that need the guts ----
+    @property
+    def executor(self):
+        """The backing executor/engine: an
+        :class:`repro.runtime.pipeline.ActorPipelineExecutor` or
+        :class:`~repro.runtime.pipeline.TrainPipelineExecutor` for
+        ``backend="actors"``, the monolithic engine otherwise."""
+        return self._engine
+
+    @property
+    def params(self) -> Optional[Dict[str, Any]]:
+        """Current trainable params (None for inference sessions)."""
+        if self.mode != "train":
+            return None
+        return dict(self._engine.params)
+
+    @property
+    def opt_state(self):
+        """Optimizer state over all params (merged across stages for the
+        actor backend; None for SGD or inference)."""
+        if self.mode != "train":
+            return None
+        return self._engine.opt_state
+
+    @property
+    def step_count(self) -> int:
+        return getattr(self._engine, "step_count", 0)
+
+    @property
+    def last_makespan(self) -> Optional[float]:
+        return self._engine.last_makespan
+
+    def load_params(self, params: Dict[str, Any]) -> None:
+        """Replace the session-owned params (e.g. checkpoint restore);
+        optimizer state is untouched."""
+        if self.mode != "train":
+            raise RuntimeError("load_params() on an inference session")
+        self._engine.load_params(params)
+
+    def run(self, **inputs) -> Dict[str, Any]:
+        """Execute the compiled inference program over ``inputs`` (one
+        keyword per graph input) and return ``{sink name: value}``."""
+        if self.mode != "train":
+            outs = self._engine.run(inputs, timeout=self.timeout)
+            self.history.append({"kind": "run",
+                                 "makespan": self._engine.last_makespan})
+            return {t.name: v for t, v in zip(self._sinks, outs)}
+        raise RuntimeError(
+            "run() on a train-mode session; use step(**batch) "
+            "(or compile with mode='infer')")
+
+    def step(self, **batch) -> StepResult:
+        """Run one training step over the session-owned params and return a
+        :class:`StepResult`. ``batch`` maps every non-param graph input to
+        its value; the names in ``microbatch_inputs`` are split into
+        ``num_microbatches`` chunks along axis 0."""
+        if self.mode != "train":
+            raise RuntimeError(
+                "step() on an infer-mode session; use run(**inputs) "
+                "(or compile with mode='train', params=...)")
+        index = self._engine.step_count
+        loss, grads, params = self._engine.step(batch, timeout=self.timeout)
+        metrics = {
+            "step": index,
+            "lr": (self.optimizer.lr_at(index)
+                   if self.optimizer is not None else None),
+            "grad_norm": self._engine.last_grad_norm,
+            "makespan": self._engine.last_makespan,
+        }
+        if self.backend == "actors":
+            metrics["peak_inflight"] = self._engine.peak_inflight_activations
+        # history holds host floats only, so a long training loop never
+        # pins device arrays
+        gn = metrics["grad_norm"]
+        self.history.append({"kind": "step", "loss": float(loss), **metrics,
+                             "grad_norm": None if gn is None else float(gn)})
+        return StepResult(loss=loss, metrics=metrics, grads=grads,
+                          params=params)
+
+    def describe(self) -> str:
+        """Human-readable report of the compiled artifact: graph shape, SBP
+        plan, stage partition + register quotas, optimizer."""
+        g = self.graph
+        lines = [f"=== repro.api session: mode={self.mode} "
+                 f"backend={self.backend} ===",
+                 f"graph: {len(g.ops)} ops, "
+                 f"inputs {[t.name for t in g.inputs]}, "
+                 f"sinks {[t.name for t in self._sinks]}",
+                 f"microbatches: {self.num_microbatches} over "
+                 f"{self.microbatch_inputs or '(none)'}"]
+        if self.mode == "train":
+            opt = self.optimizer
+            lines.append(
+                f"optimizer: {opt.kind} (grad_clip={opt.grad_clip}, "
+                f"stateful={opt.stateful})" if opt is not None
+                else "optimizer: none")
+        lines.append(self.plan.describe())
+        if self.partition is not None:
+            lines.append(self.partition.describe(g, regs=self.regs))
+        else:
+            lines.append("single whole-graph jitted program "
+                         "(no stage partition)")
+        if self.reg_plan is not None:
+            rp = self.reg_plan
+            lines.append(
+                f"register plan (simulated): quota={rp.regs[0]} "
+                f"makespan={rp.makespan:.1f} "
+                f"bubble={rp.bubble_fraction:.2f}")
+        return "\n".join(lines)
+
+    def __repr__(self):
+        return (f"Session(mode={self.mode!r}, backend={self.backend!r}, "
+                f"stages={self.partition.num_stages if self.partition else 1}, "
+                f"num_microbatches={self.num_microbatches})")
+
+
+def _resolve_partition(graph: LogicalGraph,
+                       partition: Optional[StagePartition],
+                       stages: Optional[int]) -> StagePartition:
+    if partition is not None:
+        if stages is not None and stages != partition.num_stages:
+            raise ValueError(
+                f"stages={stages} contradicts partition.num_stages="
+                f"{partition.num_stages}; pass one or the other")
+        return partition
+    if stages is None and all(op.stage is None for op in graph.ops):
+        raise ValueError(
+            "graph has no stage annotations; pass stages= (a count for "
+            "cost-balanced cutting) or partition=, or use "
+            "backend='monolithic'")
+    return partition_stages(graph, stages)
+
+
+def _resolve_regs(regs, partition: StagePartition, num_microbatches: int,
+                  mode: str) -> Tuple[List[int], Optional[PipelinePlan]]:
+    """Turn the declarative ``regs`` option into per-stage quotas.
+
+    None -> compile-time resource planning (:func:`plan_registers`, §2.3);
+    a policy name from :data:`REG_POLICIES` -> the corresponding schedule;
+    an explicit sequence -> validated pass-through.
+    """
+    S = partition.num_stages
+    if regs is None:
+        bwd = 2.0 if mode == "train" else 0.0
+        rp = plan_registers(S, num_microbatches, fwd_time=1.0,
+                            bwd_time=max(bwd, 1e-3))
+        return list(rp.regs), rp
+    if isinstance(regs, str):
+        if regs == "1f1b":
+            return [max(1, S - s) for s in range(S)], None
+        if regs == "gpipe":
+            return [num_microbatches] * S, None
+        if regs == "serial":
+            return [1] * S, None
+        raise ValueError(f"unknown regs policy {regs!r}; "
+                         f"pass one of {REG_POLICIES} or an explicit list")
+    regs = list(regs)
+    if len(regs) != S:
+        raise ValueError(f"need {S} register quotas, got {len(regs)}")
+    return regs, None
+
+
+def compile(graph: LogicalGraph, *, mode: str = "infer",
+            backend: str = "actors", plan: Optional[Plan] = None,
+            partition: Optional[StagePartition] = None,
+            stages: Optional[int] = None, num_microbatches: int = 1,
+            microbatch_inputs: Optional[Sequence[str]] = None,
+            regs=None, optimizer: Optional[OptimizerSpec] = None,
+            params: Optional[Dict[str, Any]] = None, loss=None,
+            lr: float = 1e-2, mesh=None, stage_meshes=None,
+            fn_wrap=None, timeout: float = 300.0) -> Session:
+    """Compile a :class:`~repro.core.graph.LogicalGraph` into a runnable
+    :class:`Session` — the single frontend over every lowering/executor path.
+
+    Declarative options (everything omitted is inferred):
+
+    * ``mode``: ``"infer"`` (:meth:`Session.run`) or ``"train"``
+      (:meth:`Session.step`; requires ``params``).
+    * ``backend``: ``"actors"`` — per-stage jitted programs driven by stage
+      actors with register-quota back-pressure (§4.3); ``"monolithic"`` —
+      one whole-graph jitted program with identical microbatch semantics
+      (the bit-identity reference).
+    * ``plan``: an SBP :class:`~repro.core.planner.Plan`; default
+      :func:`repro.core.planner.plan` (Table-2 boxing-cost minimization).
+    * ``partition`` / ``stages``: an explicit
+      :class:`~repro.core.graph.StagePartition`, or a stage count for
+      cost-balanced cutting; default: the graph's ``g.stage(k)``
+      annotations. Actors backend only.
+    * ``num_microbatches`` / ``microbatch_inputs``: how the batch streams
+      through the pipeline. ``microbatch_inputs`` defaults to the non-param
+      graph inputs in train mode; inference with ``num_microbatches > 1``
+      must name them explicitly.
+    * ``regs``: per-stage out-register quotas — an explicit list, a policy
+      from :data:`REG_POLICIES` (``"1f1b"``, ``"gpipe"``, ``"serial"``), or
+      None for compile-time resource planning via
+      :func:`repro.runtime.pipeline.plan_registers` (§2.3).
+    * ``optimizer``: an :class:`~repro.core.lowering.OptimizerSpec`
+      (train mode only; default SGD at ``lr``).
+    * ``params``: ``{graph input name: initial value}`` for every trainable
+      input (train mode only); the session owns them across steps.
+    * ``loss``: the sink to differentiate (default: the sole sink).
+    * ``mesh`` / ``stage_meshes``: one shared device mesh (default
+      ``graph.placement.to_mesh()``) or one mesh per stage — the paper's
+      MPMD placement (actors backend only).
+    * ``fn_wrap``: optional stage-body decorator (benchmarks use it to
+      emulate device latency; actors backend only).
+
+    The monolithic backend accepts but does not use the schedule hints
+    ``partition``/``stages``/``regs`` (so one kwargs dict can sweep both
+    backends); ``stage_meshes`` and ``fn_wrap`` would change its execution
+    and are rejected.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if num_microbatches < 1:
+        raise ValueError(
+            f"num_microbatches must be >= 1, got {num_microbatches}")
+    if mode == "infer":
+        if optimizer is not None:
+            raise ValueError(
+                "optimizer= is only meaningful for mode='train' "
+                "(inference sessions never update params)")
+        if params is not None:
+            raise ValueError(
+                "params= is only meaningful for mode='train'; inference "
+                "sessions take every graph input at run() time")
+        if loss is not None:
+            raise ValueError(
+                "loss= is only meaningful for mode='train' "
+                "(nothing is differentiated in inference)")
+    else:
+        if params is None:
+            raise ValueError(
+                "mode='train' requires params= "
+                "({graph input name: initial value})")
+        params = _canonical_params(graph, params)
+        if optimizer is None:
+            optimizer = OptimizerSpec.sgd(lr)
+
+    if plan is None:
+        plan = plan_sbp(graph)
+
+    input_names = [t.name for t in graph.inputs]
+    if microbatch_inputs is None:
+        if mode == "train":
+            microbatch_inputs = [n for n in input_names if n not in params]
+        elif num_microbatches > 1:
+            raise ValueError(
+                "num_microbatches > 1 needs microbatch_inputs= naming the "
+                "graph inputs to split along axis 0")
+        else:
+            microbatch_inputs = []
+    microbatch_inputs = list(microbatch_inputs)
+    for n in microbatch_inputs:
+        if n not in input_names:
+            raise ValueError(f"{n} is not a graph input")
+
+    if backend == "monolithic":
+        # partition/stages/regs are schedule *hints* — harmless to accept so
+        # a backend sweep can reuse one kwargs dict — but fn_wrap and
+        # stage_meshes change execution and cannot be honored here
+        if stage_meshes is not None:
+            raise ValueError("stage_meshes requires backend='actors' "
+                             "(the monolithic program runs on one mesh)")
+        if fn_wrap is not None:
+            raise ValueError("fn_wrap requires backend='actors' "
+                             "(there are no stage bodies to wrap)")
+        if mesh is None:
+            mesh = graph.placement.to_mesh()
+        if mode == "infer":
+            engine = _MonolithicInferEngine(graph, plan, mesh,
+                                            microbatch_inputs,
+                                            num_microbatches)
+        else:
+            engine = _MonolithicTrainEngine(graph, plan, mesh, params,
+                                            microbatch_inputs,
+                                            num_microbatches, optimizer,
+                                            loss=loss)
+        return Session(graph=graph, mode=mode, backend=backend,
+                       engine=engine, plan=plan, partition=None, regs=None,
+                       reg_plan=None, optimizer=optimizer,
+                       microbatch_inputs=microbatch_inputs,
+                       num_microbatches=num_microbatches, timeout=timeout)
+
+    part = _resolve_partition(graph, partition, stages)
+    regs, reg_plan = _resolve_regs(regs, part, num_microbatches, mode)
+    if mesh is None and stage_meshes is None:
+        mesh = graph.placement.to_mesh()
+    if mode == "infer":
+        staged = lower_stages(graph, plan, part, mesh=mesh,
+                              stage_meshes=stage_meshes)
+        engine = ActorPipelineExecutor(staged, microbatch_inputs,
+                                       num_microbatches, regs=regs,
+                                       fn_wrap=fn_wrap)
+    else:
+        tstaged = lower_train_stages(graph, plan, part, list(params),
+                                     loss=loss, mesh=mesh,
+                                     stage_meshes=stage_meshes,
+                                     optimizer=optimizer)
+        engine = TrainPipelineExecutor(tstaged, params, microbatch_inputs,
+                                       num_microbatches, lr=lr, regs=regs,
+                                       fn_wrap=fn_wrap, optimizer=optimizer)
+    return Session(graph=graph, mode=mode, backend=backend, engine=engine,
+                   plan=plan, partition=part, regs=regs, reg_plan=reg_plan,
+                   optimizer=optimizer, microbatch_inputs=microbatch_inputs,
+                   num_microbatches=num_microbatches, timeout=timeout)
+
+
+def _assert_tree_equal(name: str, a, b, context: str) -> None:
+    import numpy as np
+
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype != b.dtype or a.shape != b.shape or not np.array_equal(a, b):
+        diff = ""
+        if a.shape == b.shape and a.dtype == b.dtype:
+            delta = np.max(np.abs(a.astype(np.float64)
+                                  - b.astype(np.float64)))
+            diff = f" (max abs diff {delta:g})"
+        raise AssertionError(
+            f"sessions disagree on {name} at {context}: "
+            f"{a.dtype}{list(a.shape)} vs {b.dtype}{list(b.shape)}{diff}")
+
+
+def assert_sessions_match(a: Session, b: Session, inputs: Dict[str, Any],
+                          steps: int = 1) -> None:
+    """Bit-identity check between two sessions compiled from the same graph
+    (typically ``backend="actors"`` vs ``backend="monolithic"``).
+
+    Inference sessions: run both on ``inputs`` and compare every sink
+    bitwise. Training sessions: step both ``steps`` times on the same batch
+    and compare loss, post-clip grads, updated params, and (when stateful)
+    the merged optimizer state after every step. Raises ``AssertionError``
+    naming the first mismatching tensor.
+    """
+    if a.mode != b.mode:
+        raise ValueError(f"cannot compare mode={a.mode!r} with {b.mode!r}")
+    if a.mode == "infer":
+        ra, rb = a.run(**inputs), b.run(**inputs)
+        for name in ra:
+            _assert_tree_equal(f"sink {name!r}", ra[name], rb[name], "run")
+        return
+    import numpy as np
+
+    for k in range(steps):
+        sa, sb = a.step(**inputs), b.step(**inputs)
+        ctx = f"step {k}"
+        _assert_tree_equal("loss", sa.loss, sb.loss, ctx)
+        for n in sa.grads:
+            _assert_tree_equal(f"grad {n!r}", sa.grads[n], sb.grads[n], ctx)
+        for n in sa.params:
+            _assert_tree_equal(f"param {n!r}", sa.params[n], sb.params[n],
+                               ctx)
+        oa, ob = a.opt_state, b.opt_state
+        if (oa is None) != (ob is None):
+            raise AssertionError(
+                f"sessions disagree on opt_state presence at {ctx}")
+        if oa is not None:
+            if int(oa.step) != int(ob.step):
+                raise AssertionError(
+                    f"opt_state.step differs at {ctx}: "
+                    f"{int(oa.step)} vs {int(ob.step)}")
+            for n in oa.mu:
+                _assert_tree_equal(f"opt mu {n!r}", oa.mu[n], ob.mu[n], ctx)
+                _assert_tree_equal(f"opt nu {n!r}", oa.nu[n], ob.nu[n], ctx)

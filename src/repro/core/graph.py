@@ -181,6 +181,14 @@ class LogicalGraph:
                 stack.extend(cur.producer.inputs)
         return seen
 
+    # -- compilation -----------------------------------------------------------
+    def compile(self, **options):
+        """Compile this graph into a runnable :class:`repro.api.Session` —
+        shorthand for ``repro.api.compile(graph, **options)``, the single
+        frontend over every lowering/executor path (paper §2, §4)."""
+        from repro.api import compile as _compile
+        return _compile(self, **options)
+
 
 # ---------------------------------------------------------------------------
 # Pipeline-stage partitioning (paper §4.3: the compiler cuts the physical
@@ -219,13 +227,18 @@ class StagePartition:
     def ops_in(self, graph: "LogicalGraph", stage: int) -> List[LOp]:
         return [op for op in graph.topo_ops() if self.stage_of[op.name] == stage]
 
-    def describe(self, graph: "LogicalGraph") -> str:
+    def describe(self, graph: "LogicalGraph",
+                 regs: Optional[Sequence[int]] = None) -> str:
+        """Report the cut: ops and cost per stage, plus — when ``regs`` is
+        given — each stage's out-register quota (the in-flight microbatch
+        bound its pipeline schedule emerges from)."""
         lines = [f"=== stage partition ({self.num_stages} stages) ==="]
         for s in range(self.num_stages):
             ops = self.ops_in(graph, s)
             cost = sum(op_cost(op) for op in ops)
+            quota = f"  regs={regs[s]}" if regs is not None else ""
             lines.append(f"  stage {s}: {[op.name for op in ops]}"
-                         f"  (~{cost:,.0f} flop)")
+                         f"  (~{cost:,.0f} flop){quota}")
         return "\n".join(lines)
 
 

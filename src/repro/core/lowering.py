@@ -16,12 +16,17 @@ Two entry points share one subgraph lowerer:
   (:class:`StagedProgram`), with boxing at stage boundaries. This is the
   compiler half of actor-driven pipeline execution (§4.3): the runtime half
   lives in :mod:`repro.runtime.pipeline`.
+
+These (and the training variants :func:`lower_train_plan` /
+:func:`lower_train_stages`) are compiler internals; user code reaches them
+through the :mod:`repro.api` frontend — ``api.compile(graph, ...)`` picks
+the plan/partition/quotas and wraps the result in a uniform ``Session``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -572,6 +577,31 @@ def split_microbatches(inputs: Dict[str, Any], microbatch_names: Sequence[str],
                                            num_microbatches, axis=0)):
             payloads[k][n] = chunk
     return payloads
+
+
+def reassemble_sinks(graph: LogicalGraph, sinks: Sequence[LTensor],
+                     microbatch_inputs: Sequence[str],
+                     per_chunk: Sequence[Dict[str, Any]]) -> Tuple:
+    """Reassemble graph sinks from per-microbatch results (the inverse of
+    :func:`split_microbatches`), one value per ``sinks`` entry.
+
+    Sinks downstream of a microbatched input are per-chunk slices ->
+    concatenate along the batch axis; anything else (e.g. a weights-only
+    sink) is recomputed identically every chunk -> take one copy. Shared by
+    the actor pipeline and the monolithic backend so the two reassemble
+    bit-identically.
+    """
+    import numpy as np
+
+    mb_dependent = graph.downstream_of(microbatch_inputs)
+    results = []
+    for t in sinks:
+        if t.name in mb_dependent:
+            results.append(np.concatenate(
+                [np.asarray(d[t.name]) for d in per_chunk], axis=0))
+        else:
+            results.append(np.asarray(per_chunk[0][t.name]))
+    return tuple(results)
 
 
 def _scatter_args(diff_idx: Sequence[int], nondiff_idx: Sequence[int],

@@ -141,6 +141,84 @@ def plan_registers(num_stages: int, num_microbatches: int,
 # overlap *emerges* (§4.3) instead of being scheduled explicitly.
 # ---------------------------------------------------------------------------
 
+def check_run_inputs(provided, expected, what: str = "input",
+                     owned: Sequence[str] = ()) -> None:
+    """Fail fast with the offending key when a run/step input dict has
+    unknown or missing names, instead of failing deep inside an actor body.
+
+    ``expected`` are the names the caller must provide; ``owned`` are names
+    the executor itself supplies (trainable params) — passing one of those is
+    reported as such rather than as merely "unknown".
+    """
+    expected = set(expected)
+    owned = set(owned)
+    provided = set(provided)
+    shadowed = sorted(provided & owned)
+    if shadowed:
+        raise ValueError(
+            f"{what} {shadowed[0]!r} is a trainable param owned by the "
+            f"executor; pass only data inputs (expected: {sorted(expected)})")
+    unknown = sorted(provided - expected)
+    if unknown:
+        more = f" (+{len(unknown) - 1} more)" if len(unknown) > 1 else ""
+        raise ValueError(
+            f"unknown {what} {unknown[0]!r}{more}; "
+            f"expected {what}s: {sorted(expected)}")
+    missing = sorted(expected - provided)
+    if missing:
+        more = f" (+{len(missing) - 1} more)" if len(missing) > 1 else ""
+        raise ValueError(
+            f"missing {what} {missing[0]!r}{more}; "
+            f"expected {what}s: {sorted(expected)}")
+
+
+class _StagedExecutorBase:
+    """Shared machinery of the two stage-pipeline executors.
+
+    Construction-time validation (microbatch count, register-quota length,
+    microbatch input names), run-time input validation
+    (:func:`check_run_inputs`), and per-run instrumentation — everything that
+    was once copy-pasted between :class:`ActorPipelineExecutor` and
+    :class:`TrainPipelineExecutor` lives here, so new executors (multi-node,
+    serving batching) inherit one uniform contract.
+    """
+
+    def __init__(self, program, microbatch_inputs: Sequence[str],
+                 num_microbatches: int, regs: Optional[Sequence[int]],
+                 fn_wrap: Optional[Callable] = None):
+        if num_microbatches < 1:
+            raise ValueError(
+                f"num_microbatches must be >= 1, got {num_microbatches}")
+        if regs is not None:
+            regs = list(regs)
+            if len(regs) != program.num_stages:
+                raise ValueError(f"need {program.num_stages} register quotas, "
+                                 f"got {len(regs)}")
+        for n in microbatch_inputs:
+            if n not in program.input_names:
+                raise ValueError(f"{n} is not a graph input")
+        self.microbatch_inputs = list(microbatch_inputs)
+        self.num_microbatches = num_microbatches
+        self.regs = regs
+        self.fn_wrap = fn_wrap
+        self.last_makespan: Optional[float] = None
+        self.last_history: Dict[str, List[Tuple[float, float]]] = {}
+        self.last_peak_regs: Dict[str, int] = {}
+
+    def _execute(self, specs: List[ActorSpec], collect, timeout: float):
+        """Run one actor graph to completion, recording wall-clock makespan,
+        per-actor action history, and peak out-registers in use."""
+        rt = ThreadedRuntime(specs, collect_outputs_of=collect)
+        t0 = time.perf_counter()
+        outs = rt.run(timeout=timeout)
+        self.last_makespan = time.perf_counter() - t0
+        self.last_history = {name: list(a.history)
+                             for name, a in rt.by_name.items()}
+        self.last_peak_regs = {name: a.peak_regs_in_use
+                               for name, a in rt.by_name.items()}
+        return outs
+
+
 def _bind_placed(stage, bound: Dict[str, Any]):
     """Pre-place the build-time-bound inputs (weights) on the stage's mesh
     once — they are constant for the whole run, so transferring them per
@@ -254,7 +332,7 @@ def stage_actor_specs(staged, inputs: Dict[str, Any],
     return specs, f"stage{S - 1}"
 
 
-class ActorPipelineExecutor:
+class ActorPipelineExecutor(_StagedExecutorBase):
     """Run a :class:`StagedProgram` on the threaded actor runtime.
 
     Each call builds a fresh actor graph (actors are single-use state
@@ -267,55 +345,26 @@ class ActorPipelineExecutor:
     def __init__(self, staged, microbatch_inputs: Sequence[str],
                  num_microbatches: int, regs: Optional[Sequence[int]] = None,
                  fn_wrap: Optional[Callable] = None):
-        if num_microbatches < 1:
-            raise ValueError(
-                f"num_microbatches must be >= 1, got {num_microbatches}")
-        if regs is not None:
-            regs = list(regs)
-            if len(regs) != staged.num_stages:
-                raise ValueError(f"need {staged.num_stages} register quotas, "
-                                 f"got {len(regs)}")
+        super().__init__(staged, microbatch_inputs, num_microbatches, regs,
+                         fn_wrap)
         self.staged = staged
-        self.microbatch_inputs = list(microbatch_inputs)
-        self.num_microbatches = num_microbatches
-        self.regs = regs
-        self.fn_wrap = fn_wrap
-        self.last_makespan: Optional[float] = None
-        self.last_history: Dict[str, List[Tuple[float, float]]] = {}
-        self.last_peak_regs: Dict[str, int] = {}
 
     def run(self, inputs: Dict[str, Any], timeout: float = 300.0) -> Tuple:
-        import numpy as np
-
+        check_run_inputs(inputs, self.staged.input_names)
         specs, final = stage_actor_specs(
             self.staged, inputs, self.microbatch_inputs,
             self.num_microbatches, regs=self.regs, fn_wrap=self.fn_wrap)
-        rt = ThreadedRuntime(specs, collect_outputs_of=final)
-        t0 = time.perf_counter()
-        outs = rt.run(timeout=timeout)
-        self.last_makespan = time.perf_counter() - t0
-        self.last_history = {name: list(a.history)
-                             for name, a in rt.by_name.items()}
-        self.last_peak_regs = {name: a.peak_regs_in_use
-                               for name, a in rt.by_name.items()}
+        outs = self._execute(specs, final, timeout)
         if len(outs) != self.num_microbatches:
             raise RuntimeError(
                 f"collected {len(outs)} microbatch results, expected "
                 f"{self.num_microbatches}")
         # the final stage fires in version order on one thread, so ``outs``
-        # is already microbatch-ordered. Sinks downstream of a microbatched
-        # input are per-chunk slices -> concatenate along the batch axis;
-        # anything else (e.g. a weights-only sink) is recomputed identically
-        # every firing -> take one copy.
-        mb_dependent = self.staged.graph.downstream_of(self.microbatch_inputs)
-        results = []
-        for t in self.staged.sinks:
-            if t.name in mb_dependent:
-                results.append(np.concatenate(
-                    [np.asarray(d[t.name]) for d in outs], axis=0))
-            else:
-                results.append(np.asarray(outs[0][t.name]))
-        return tuple(results)
+        # is already microbatch-ordered
+        from repro.core.lowering import reassemble_sinks
+
+        return reassemble_sinks(self.staged.graph, self.staged.sinks,
+                                self.microbatch_inputs, outs)
 
 
 # ---------------------------------------------------------------------------
@@ -606,7 +655,7 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
     return specs, collect
 
 
-class TrainPipelineExecutor:
+class TrainPipelineExecutor(_StagedExecutorBase):
     """Run a :class:`TrainStagedProgram` as a 1F1B training pipeline.
 
     Holds the current params *and the optimizer state*; each :meth:`step`
@@ -639,39 +688,42 @@ class TrainPipelineExecutor:
                  microbatch_inputs: Sequence[str], num_microbatches: int,
                  lr: float = 1e-2, regs: Optional[Sequence[int]] = None,
                  fn_wrap: Optional[Callable] = None, optimizer=None):
-        import jax
-
         from repro.core.lowering import OptimizerSpec
 
-        missing = [n for n in tstaged.param_names if n not in params]
-        if missing:
-            raise ValueError(f"missing params: {missing}")
-        if num_microbatches < 1:
-            raise ValueError(
-                f"num_microbatches must be >= 1, got {num_microbatches}")
-        if regs is not None:
-            regs = list(regs)
-            if len(regs) != tstaged.num_stages:
-                raise ValueError(
-                    f"need {tstaged.num_stages} register quotas, "
-                    f"got {len(regs)}")
-        for n in microbatch_inputs:
-            if n not in tstaged.input_names:
-                raise ValueError(f"{n} is not a graph input")
+        super().__init__(tstaged, microbatch_inputs, num_microbatches, regs,
+                         fn_wrap)
         self.tstaged = tstaged
-        self.params = {n: params[n] for n in tstaged.param_names}
-        self.microbatch_inputs = list(microbatch_inputs)
-        self.num_microbatches = num_microbatches
         self.lr = lr
-        self.regs = regs
-        self.fn_wrap = fn_wrap
         self.optimizer = optimizer if optimizer is not None else (
             tstaged.optimizer if tstaged.optimizer is not None
             else OptimizerSpec.sgd(lr))
-        # bind stage params onto their meshes once; opt actors return the
-        # updated values already placed, so steps never re-transfer weights
+        self.params: Dict[str, Any] = {}
         self._placed_params: Dict[int, Dict[str, Any]] = {}
-        for st in tstaged.stages:
+        self.load_params(params)
+        # persistent per-stage optimizer state (None entries for SGD)
+        self.opt_states: Dict[int, Any] = {
+            st.index: self.optimizer.init_state(
+                {n: self.params[n] for n in st.param_names})
+            for st in tstaged.stages if st.param_names}
+        self.step_count = 0
+        self.last_grad_norm = None
+
+    def load_params(self, params: Dict[str, Any]) -> None:
+        """Replace the executor-owned params (e.g. a checkpoint restore).
+
+        Binds each stage's params onto its mesh once; the opt actors return
+        updated values already placed, so steps never re-transfer weights.
+        Optimizer state is untouched — reset ``opt_states`` separately if the
+        new params are unrelated to the old trajectory.
+        """
+        import jax
+
+        missing = [n for n in self.tstaged.param_names if n not in params]
+        if missing:
+            raise ValueError(f"missing params: {missing}")
+        self.params = {n: params[n] for n in self.tstaged.param_names}
+        self._placed_params = {}
+        for st in self.tstaged.stages:
             if not st.param_names:
                 continue
             vals = {n: self.params[n] for n in st.param_names}
@@ -680,16 +732,6 @@ class TrainPipelineExecutor:
                 vals = {n: jax.device_put(v, shard_of[n])
                         for n, v in vals.items()}
             self._placed_params[st.index] = vals
-        # persistent per-stage optimizer state (None entries for SGD)
-        self.opt_states: Dict[int, Any] = {
-            st.index: self.optimizer.init_state(
-                {n: self.params[n] for n in st.param_names})
-            for st in tstaged.stages if st.param_names}
-        self.step_count = 0
-        self.last_grad_norm = None
-        self.last_makespan: Optional[float] = None
-        self.last_history: Dict[str, List[Tuple[float, float]]] = {}
-        self.last_peak_regs: Dict[str, int] = {}
 
     @property
     def peak_inflight_activations(self) -> int:
@@ -725,6 +767,10 @@ class TrainPipelineExecutor:
         """
         import jax.numpy as jnp
 
+        check_run_inputs(
+            data_inputs,
+            [n for n in self.tstaged.input_names if n not in self.params],
+            owned=self.tstaged.param_names)
         inputs = dict(data_inputs)
         inputs.update(self.params)
         specs, collect = train_stage_actor_specs(
@@ -733,14 +779,7 @@ class TrainPipelineExecutor:
             fn_wrap=self.fn_wrap, optimizer=self.optimizer,
             opt_states=self.opt_states, step_index=self.step_count,
             placed_params=self._placed_params)
-        rt = ThreadedRuntime(specs, collect_outputs_of=collect)
-        t0 = time.perf_counter()
-        outs = rt.run(timeout=timeout)
-        self.last_makespan = time.perf_counter() - t0
-        self.last_history = {name: list(a.history)
-                             for name, a in rt.by_name.items()}
-        self.last_peak_regs = {name: a.peak_regs_in_use
-                               for name, a in rt.by_name.items()}
+        outs = self._execute(specs, collect, timeout)
 
         # the loss-bearing backward actor fires in version order on one
         # thread, so the collected loss stream is microbatch-ordered

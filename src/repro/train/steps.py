@@ -321,10 +321,14 @@ def make_serve_step(cfg: ModelConfig, mesh, cache_len: int,
 
 
 # ---------------------------------------------------------------------------
-# LogicalGraph training steps (paper §4.3): monolithic reference vs 1F1B
-# pipeline. Both chunk the batch with the same helper and accumulate in
-# microbatch order, so their losses/gradients/updates are bit-identical —
-# the pipeline changes the *schedule*, never the numerics.
+# LogicalGraph training steps — DEPRECATED shims over repro.api.compile.
+#
+# The real machinery lives in repro.api: compile(graph, mode="train",
+# backend="monolithic"|"actors") returns a Session with one uniform surface.
+# These wrappers only preserve the historical calling conventions
+# (per-call param threading for the monolithic step, a bare
+# TrainPipelineExecutor for the pipelined one) for code written against
+# PR 2/3; new code should call repro.api.compile directly.
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -365,7 +369,9 @@ def make_graph_train_step(graph, mesh, params, microbatch_inputs,
                           num_microbatches: int, lr: float = 1e-2,
                           loss=None, graph_plan=None,
                           optimizer=None) -> GraphTrainStep:
-    """Build the monolithic (non-pipelined) training step for ``graph``.
+    """DEPRECATED: use ``repro.api.compile(graph, mode="train",
+    backend="monolithic", ...)`` — this shim only adapts the old
+    params-threaded-per-call convention onto the session it builds.
 
     ``params`` names the graph inputs to train; ``microbatch_inputs`` names
     the inputs split along axis 0 into ``num_microbatches`` chunks. The SBP
@@ -373,52 +379,48 @@ def make_graph_train_step(graph, mesh, params, microbatch_inputs,
     ``graph_plan`` is given. ``optimizer`` is an
     :class:`repro.core.lowering.OptimizerSpec` (default: SGD at ``lr``).
     """
-    from repro.core.lowering import (OptimizerSpec, lower_train_plan,
-                                     split_microbatches)
-    from repro.core.planner import plan as plan_sbp
-    from repro.optim.adamw import (clip_scale, global_norm_from_partials,
-                                   scale_grad, sqnorm_partials)
+    import warnings
 
-    p = graph_plan if graph_plan is not None else plan_sbp(graph)
-    vg = lower_train_plan(graph, p, mesh, params, loss=loss)
+    warnings.warn(
+        "make_graph_train_step is deprecated; use repro.api.compile("
+        "graph, mode='train', backend='monolithic', ...) instead",
+        DeprecationWarning, stacklevel=2)
+
+    from repro import api
+    from repro.core.lowering import (OptimizerSpec, _resolve_loss,
+                                     _resolve_params)
+
     param_names = tuple(getattr(t, "name", t) for t in params)
-    input_names = [t.name for t in graph.inputs]
-    mb_names = list(microbatch_inputs)
-    mb = set(mb_names)
+    # fail at build time like the old direct lowering did, not on first step
+    _resolve_params(graph, param_names)
+    _resolve_loss(graph, loss)
     opt = optimizer if optimizer is not None else OptimizerSpec.sgd(lr)
-
     ts = GraphTrainStep(step_fn=None, param_names=param_names,
                         num_microbatches=num_microbatches, lr=lr,
                         optimizer=opt)
+    holder: Dict[str, Any] = {"session": None}
 
     def step_fn(param_values: Dict[str, Any], data: Dict[str, Any]):
-        chunks = split_microbatches(data, mb_names, num_microbatches)
-        loss_total, grads = None, None
-        for chunk in chunks:
-            vals = [chunk[n] if n in mb
-                    else (param_values[n] if n in param_values else data[n])
-                    for n in input_names]
-            loss_vec, g = vg(*vals)
-            ls = jnp.sum(loss_vec)
-            loss_total = ls if loss_total is None else loss_total + ls
-            g32 = [x.astype(jnp.float32) for x in g]
-            grads = (g32 if grads is None
-                     else [a + b for a, b in zip(grads, g32)])
-        gdict = dict(zip(param_names, grads))
-        if opt.grad_clip:
-            norm = global_norm_from_partials(sqnorm_partials(gdict),
-                                             param_names)
-            scale = clip_scale(norm, opt.grad_clip)
-            gdict = {n: scale_grad(g, scale) for n, g in gdict.items()}
-            ts.last_grad_norm = norm
-        if opt.stateful and ts.opt_state is None:
-            ts.opt_state = opt.init_state(
-                {n: param_values[n] for n in param_names})
-        new_params, ts.opt_state = opt.update(
-            {n: param_values[n] for n in param_names}, gdict, ts.opt_state,
-            opt.lr_at(ts.step_count))
-        ts.step_count += 1
-        return loss_total, gdict, new_params
+        sess = holder["session"]
+        missing = [n for n in param_names if n not in param_values]
+        if missing:
+            raise ValueError(f"missing params: {missing}")
+        pvals = {n: param_values[n] for n in param_names}
+        if sess is None:
+            sess = holder["session"] = api.compile(
+                graph, mode="train", backend="monolithic", plan=graph_plan,
+                mesh=mesh, params=pvals,
+                microbatch_inputs=list(microbatch_inputs),
+                num_microbatches=num_microbatches, lr=lr, optimizer=opt,
+                loss=loss)
+        else:
+            sess.load_params(pvals)
+        res = sess.step(**{n: v for n, v in data.items()
+                           if n not in pvals})
+        ts.opt_state = sess.opt_state
+        ts.step_count = sess.step_count
+        ts.last_grad_norm = res.metrics["grad_norm"]
+        return res.loss, res.grads, res.params
 
     ts.step_fn = step_fn
     return ts
@@ -430,16 +432,10 @@ def make_pipeline_train_step(graph, init_params: Dict[str, Any],
                              stage_meshes=None, lr: float = 1e-2,
                              regs=None, loss=None, graph_plan=None,
                              fn_wrap=None, optimizer=None):
-    """Build the 1F1B pipelined alternative to :func:`make_graph_train_step`.
-
-    Cuts ``graph`` into stages (user ``graph.stage(k)`` annotations, or
-    cost-balanced into ``num_stages``), lowers forward/backward/optimizer
-    programs per stage (:func:`repro.core.lowering.lower_train_stages`), and
-    returns a :class:`repro.runtime.pipeline.TrainPipelineExecutor` whose
-    ``step(data)`` streams the microbatches through stage actors — gradient,
-    loss, and updated params bit-identical to the monolithic step, with the
-    1F1B schedule emerging from the forward register quotas (``regs``,
-    default ``num_stages - s``).
+    """DEPRECATED: use ``repro.api.compile(graph, mode="train",
+    backend="actors", ...)`` — this shim compiles a session and returns its
+    backing :class:`repro.runtime.pipeline.TrainPipelineExecutor` to
+    preserve the historical return type.
 
     ``init_params`` maps each trainable graph input to its initial value;
     the executor owns the params (and any optimizer state) from then on.
@@ -448,23 +444,23 @@ def make_pipeline_train_step(graph, init_params: Dict[str, Any],
     cross-stage ``norm`` actor for global-norm clipping (default: SGD at
     ``lr``).
     """
-    from repro.core.graph import partition_stages
-    from repro.core.lowering import lower_train_stages
-    from repro.core.planner import plan as plan_sbp
-    from repro.runtime.pipeline import TrainPipelineExecutor
+    import warnings
 
-    p = graph_plan if graph_plan is not None else plan_sbp(graph)
-    # partition_stages validates num_stages against annotations when both
-    # are present, and requires it when the graph is unannotated
-    partition = partition_stages(graph, num_stages)
-    param_names = [t.name for t in graph.inputs if t.name in init_params]
-    if len(param_names) != len(init_params):
-        extra = set(init_params) - set(param_names)
-        raise ValueError(f"init_params entries are not graph inputs: "
-                         f"{sorted(extra)}")
-    tstaged = lower_train_stages(graph, p, partition, param_names, loss=loss,
-                                 mesh=mesh, stage_meshes=stage_meshes,
-                                 optimizer=optimizer)
-    return TrainPipelineExecutor(tstaged, init_params, microbatch_inputs,
-                                 num_microbatches, lr=lr, regs=regs,
-                                 fn_wrap=fn_wrap, optimizer=optimizer)
+    warnings.warn(
+        "make_pipeline_train_step is deprecated; use repro.api.compile("
+        "graph, mode='train', backend='actors', ...) instead",
+        DeprecationWarning, stacklevel=2)
+
+    from repro import api
+
+    sess = api.compile(
+        graph, mode="train", backend="actors", plan=graph_plan,
+        stages=num_stages, params=init_params,
+        microbatch_inputs=list(microbatch_inputs),
+        num_microbatches=num_microbatches, lr=lr,
+        # preserve this shim's historical default schedule (1F1B) rather
+        # than compile()'s simulated register planning
+        regs=regs if regs is not None else "1f1b",
+        loss=loss, mesh=mesh, stage_meshes=stage_meshes, fn_wrap=fn_wrap,
+        optimizer=optimizer)
+    return sess.executor
