@@ -13,6 +13,9 @@ subprocesses with placeholder host devices (the main process keeps 1 device).
   §3.3+§4.3-> bench_1f1b_adamw            (subprocess, 8 devices; also
               writes BENCH_1f1b_adamw.json: stateful AdamW + cross-stage
               grad-clipping pipeline, serialized vs 1F1B)
+  §4.3 serve-> bench_serve_pipeline       (subprocess; also writes
+              BENCH_serve_pipeline.json: serialized single-request decode
+              vs pipelined continuous batching, tok/s)
 
 ``--smoke`` runs only the BENCH_*.json-writing benchmarks, one repetition
 each (BENCH_SMOKE=1), so CI keeps the recording code paths honest without
@@ -29,7 +32,7 @@ import traceback
 
 
 BENCH_WRITERS = ("bench_actor_pipeline", "bench_1f1b_train",
-                 "bench_1f1b_adamw")
+                 "bench_1f1b_adamw", "bench_serve_pipeline")
 
 
 def main() -> None:

@@ -1,8 +1,14 @@
-"""Serving example: batched prefill + greedy decode with a seq-sharded KV
-cache (GQA) or latent cache (MLA).
+"""Serving example: continuous-batching pipelined decode via repro.api.
+
+Six requests with unequal generation lengths are served through a 2-stage
+actor pipeline with 2 request groups of 2 decode slots each: finished
+requests retire their slot mid-flight and queued requests are admitted into
+it (prompt prefill flows down the same stage actors). The monolithic
+whole-stack backend replays the same schedule inline and must produce the
+same tokens.
 
     python examples/serve_decode.py --arch deepseek-v2-lite-16b
-    python -m examples.serve_decode --arch jamba-v0.1-52b
+    python -m examples.serve_decode --arch qwen2.5-3b
 """
 try:
     from examples import _bootstrap  # noqa: F401  (python -m examples.serve_decode)
@@ -16,57 +22,48 @@ import time
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
     import numpy as np
 
+    from repro import api
     from repro.configs.registry import get_config
-    from repro.models.model_zoo import build_model
-    from repro.train.steps import make_serve_step, plan_from_mesh
 
     cfg = get_config(args.arch).reduced()
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
-    ss = make_serve_step(cfg, mesh, cache_len=args.prompt_len + args.gen + 8)
-    params = build_model(cfg, plan_from_mesh(mesh)).init(jax.random.PRNGKey(0))
-
     rng = np.random.default_rng(0)
-    batch = {}
-    if cfg.embed_frontend and not cfg.encoder_decoder:
-        batch["embeds"] = jnp.asarray(rng.normal(
-            size=(args.batch, args.prompt_len, cfg.d_model)).astype(np.float32))
-    else:
-        batch["tokens"] = jnp.asarray(rng.integers(
-            0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
-    if cfg.encoder_decoder:
-        batch["enc_embeds"] = jnp.asarray(rng.normal(
-            size=(args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32))
+    requests = [
+        (rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32),
+         1 + (i * 3) % args.gen)                       # unequal gen lengths
+        for i in range(args.requests)]
 
     t0 = time.time()
-    h_last, caches = ss.prefill_fn(params, batch)
-    jax.block_until_ready(h_last)
-    print(f"{args.arch}: prefill {args.batch}x{args.prompt_len} "
-          f"in {time.time()-t0:.2f}s")
+    sess = api.compile(cfg, mode="serve", backend="actors",
+                       num_groups=2, group_size=2,
+                       max_prompt_len=args.prompt_len,
+                       max_new_tokens=args.gen)
+    print(sess.describe())
+    outs = sess.generate(requests)
+    stats = sess.last_stats
+    print(f"pipelined: {stats['tokens']} tokens over {stats['rounds']} "
+          f"rounds in {time.time()-t0:.1f}s "
+          f"({stats['admitted_mid_flight']} requests admitted mid-flight)")
+    print("request 0 ids:", outs[0])
 
-    tok = jnp.argmax(h_last[:, 0] @ params["unembed"], -1).astype(jnp.int32)
-    pos = jnp.full((args.batch,), args.prompt_len, jnp.int32)
-    out = [np.asarray(tok)]
-    t0 = time.time()
-    for _ in range(args.gen):
-        logits, caches = ss.decode_fn(params, caches, tok, pos)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(np.asarray(tok))
-        pos = pos + 1
-    jax.block_until_ready(tok)
-    gen = np.stack(out, 1)
-    print(f"decoded {args.gen} tokens/seq in {time.time()-t0:.2f}s")
-    print("row 0 ids:", gen[0])
-    assert np.isfinite(gen).all()
-    print("OK")
+    # the whole-stack monolithic engine is the token-identity reference
+    mono = api.compile(cfg, mode="serve", backend="monolithic",
+                       num_groups=2, group_size=2,
+                       max_prompt_len=args.prompt_len,
+                       max_new_tokens=args.gen)
+    ref = mono.generate(requests)
+    assert all(np.array_equal(a, b) for a, b in zip(outs, ref)), \
+        "pipelined tokens != monolithic tokens"
+    assert all((o < cfg.vocab_size).all() for o in outs)
+    assert stats["admitted_mid_flight"] >= 1
+    print("OK (pipelined == monolithic, "
+          f"{len(requests)} requests token-identical)")
 
 
 if __name__ == "__main__":

@@ -15,12 +15,14 @@ is the machinery underneath — importable, but :mod:`repro.api` is the entry
 point new features hang options off.
 """
 from repro import api
-from repro.api import (Session, StepResult, assert_sessions_match, compile)
+from repro.api import (ServeRequest, ServeSession, Session, StepResult,
+                       assert_sessions_match, compile)
 from repro.core.graph import LogicalGraph, partition_stages
 from repro.core.lowering import OptimizerSpec
 from repro.core.placement import Placement
 
 __all__ = [
     "api", "Session", "StepResult", "assert_sessions_match", "compile",
+    "ServeRequest", "ServeSession",
     "LogicalGraph", "partition_stages", "OptimizerSpec", "Placement",
 ]

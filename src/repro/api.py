@@ -40,15 +40,18 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.graph import (LogicalGraph, StagePartition, partition_stages)
-from repro.core.lowering import (OptimizerSpec, lower_plan, lower_stages,
-                                 lower_train_plan, lower_train_stages,
-                                 reassemble_sinks, split_microbatches)
+from repro.core.lowering import (OptimizerSpec, lower_plan, lower_serve_stages,
+                                 lower_stages, lower_train_plan,
+                                 lower_train_stages, reassemble_sinks,
+                                 split_microbatches)
 from repro.core.planner import Plan, plan as plan_sbp
-from repro.runtime.pipeline import (ActorPipelineExecutor, PipelinePlan,
+from repro.runtime.pipeline import (ActorPipelineExecutor, DecodeWork,
+                                    InlineServeEngine, PipelinePlan,
+                                    PrefillWork, ServePipelineExecutor,
                                     TrainPipelineExecutor, check_run_inputs,
                                     plan_registers)
 
-MODES = ("infer", "train")
+MODES = ("infer", "train", "serve")
 BACKENDS = ("actors", "monolithic")
 
 #: named register-quota policies accepted by ``compile(regs=...)`` — the
@@ -356,6 +359,296 @@ class Session:
                 f"num_microbatches={self.num_microbatches})")
 
 
+# ---------------------------------------------------------------------------
+# mode="serve": continuous-batching autoregressive decode (ROADMAP "serving
+# batching" seam — stage = model shard, microbatch = request group).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One generation request: prompt token ids + how many tokens to decode
+    (the first generated token, from the prefill logits, counts)."""
+
+    tokens: Any
+    max_new_tokens: int
+
+
+class ServeSession:
+    """The serving counterpart of :class:`Session`: pipelined,
+    continuously-batched greedy decode over the actor runtime.
+
+    :meth:`generate` runs a set of :class:`ServeRequest`\\ s to completion:
+    requests are packed into ``num_groups * group_size`` decode slots, each
+    round advances every live group by one token (one :class:`DecodeWork`
+    per group streamed down the stage actors), finished requests retire
+    their slot and queued ones are admitted mid-flight with a
+    :class:`PrefillWork` that scatters the new request's caches into the
+    group cache. Retired/empty slots are *parked*: they decode a dummy
+    token at the reserved position ``cache_len - 1``, which no live
+    request's attention window ever reaches, so the group program keeps one
+    fixed shape and nothing is masked inside the model.
+
+    Mirrors the :class:`Session` conventions: ``describe()`` reports the
+    compiled artifact, ``history`` accumulates one record per round, and
+    ``executor`` exposes the backing engine.
+    """
+
+    def __init__(self, *, cfg, mesh, backend: str, engine, sstaged,
+                 num_groups: int, group_size: int, cache_len: int,
+                 max_prompt_len: int, max_new_tokens: int,
+                 regs: Optional[List[int]], timeout: float = 300.0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.mode = "serve"
+        self.backend = backend
+        self.sstaged = sstaged
+        self.num_groups = num_groups
+        self.group_size = group_size
+        self.cache_len = cache_len
+        self.max_prompt_len = max_prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.regs = regs
+        self.timeout = timeout
+        self.history: List[Dict[str, Any]] = []
+        self.last_stats: Optional[Dict[str, Any]] = None
+        self._engine = engine
+
+    @property
+    def executor(self):
+        """The backing engine: a
+        :class:`repro.runtime.pipeline.ServePipelineExecutor` for
+        ``backend="actors"``, the inline monolithic engine otherwise."""
+        return self._engine
+
+    @property
+    def last_makespan(self) -> Optional[float]:
+        return self._engine.last_makespan
+
+    @staticmethod
+    def _normalize(requests) -> List[ServeRequest]:
+        out = []
+        for r in requests:
+            if isinstance(r, ServeRequest):
+                out.append(r)
+            else:
+                toks, gen = r
+                out.append(ServeRequest(toks, int(gen)))
+        return out
+
+    def generate(self, requests) -> List[Any]:
+        """Run ``requests`` (ServeRequests or ``(tokens, max_new_tokens)``
+        pairs) to completion with continuous batching; returns one int32
+        token array per request, in submission order."""
+        import numpy as np
+
+        import jax.numpy as jnp
+
+        from repro.train.steps import greedy_from_logits
+
+        reqs = self._normalize(requests)
+        V = self.cfg.vocab_size
+        prompts = []
+        for i, r in enumerate(reqs):
+            toks = np.asarray(r.tokens, dtype=np.int32)
+            if toks.ndim != 1 or toks.size == 0:
+                raise ValueError(f"request {i}: prompt must be a non-empty "
+                                 f"1-d token array, got shape {toks.shape}")
+            if toks.size > self.max_prompt_len:
+                raise ValueError(
+                    f"request {i}: prompt length {toks.size} exceeds "
+                    f"max_prompt_len={self.max_prompt_len}")
+            if (toks < 0).any() or (toks >= V).any():
+                raise ValueError(f"request {i}: prompt ids must be in "
+                                 f"[0, {V})")
+            if not (1 <= r.max_new_tokens <= self.max_new_tokens):
+                raise ValueError(
+                    f"request {i}: max_new_tokens={r.max_new_tokens} must "
+                    f"be in [1, {self.max_new_tokens}]")
+            prompts.append(toks)
+
+        park = self.cache_len - 1              # never inside a live window
+        queue = list(range(len(reqs)))
+        slots: List[List[Optional[Dict[str, Any]]]] = [
+            [None] * self.group_size for _ in range(self.num_groups)]
+        outputs: List[List[int]] = [[] for _ in reqs]
+        admitted_mid_flight = 0
+        first_round = True
+        t0 = time.perf_counter()
+
+        while queue or any(st is not None for grp in slots for st in grp):
+            work: List[Any] = []
+            meta: List[Tuple] = []
+            for g in range(self.num_groups):
+                for b in range(self.group_size):
+                    if slots[g][b] is None and queue:
+                        r = queue.pop(0)
+                        toks = prompts[r]
+                        # natural length, no padding: right-padding would
+                        # poison recurrent SSM/conv state (attention caches
+                        # are positional, SSM state is not); each distinct
+                        # prompt length costs one jit specialization
+                        work.append(PrefillWork(
+                            group=g, slot=b, tokens=jnp.asarray(toks[None]),
+                            last_index=toks.size - 1))
+                        meta.append(("prefill", g, b))
+                        if not first_round:
+                            admitted_mid_flight += 1
+                        slots[g][b] = {"req": r, "pos": None, "tok": 0,
+                                       "remaining": reqs[r].max_new_tokens}
+                live = [b for b in range(self.group_size)
+                        if slots[g][b] is not None
+                        and slots[g][b]["pos"] is not None]
+                if live:
+                    tok = [slots[g][b]["tok"] if b in live else 0
+                           for b in range(self.group_size)]
+                    pos = [slots[g][b]["pos"] if b in live else park
+                           for b in range(self.group_size)]
+                    work.append(DecodeWork(
+                        group=g, tok=jnp.asarray(tok, jnp.int32),
+                        pos=jnp.asarray(pos, jnp.int32)))
+                    meta.append(("decode", g, live))
+            first_round = False
+            results = self._engine.run_round(work, timeout=self.timeout)
+            for m, logits in zip(meta, results):
+                if m[0] == "prefill":
+                    _, g, b = m
+                    st = slots[g][b]
+                    tok = int(np.asarray(greedy_from_logits(logits, V))[0])
+                    outputs[st["req"]].append(tok)
+                    st["remaining"] -= 1
+                    if st["remaining"] == 0:
+                        slots[g][b] = None
+                    else:
+                        st["pos"] = prompts[st["req"]].size
+                        st["tok"] = tok
+                else:
+                    _, g, live = m
+                    toks = np.asarray(greedy_from_logits(logits, V))
+                    for b in live:
+                        st = slots[g][b]
+                        tok = int(toks[b])
+                        outputs[st["req"]].append(tok)
+                        st["remaining"] -= 1
+                        if st["remaining"] == 0:
+                            slots[g][b] = None
+                        else:
+                            st["pos"] += 1
+                            st["tok"] = tok
+            self.history.append({"kind": "round", "items": len(work),
+                                 "makespan": self._engine.last_makespan})
+
+        wall = time.perf_counter() - t0
+        total = sum(len(o) for o in outputs)
+        self.last_stats = {
+            "requests": len(reqs), "tokens": total,
+            "rounds": self._engine.rounds, "wall_s": wall,
+            "tok_per_s": total / wall if wall > 0 else float("inf"),
+            "admitted_mid_flight": admitted_mid_flight,
+        }
+        self.history.append({"kind": "generate", **self.last_stats})
+        return [np.asarray(o, np.int32) for o in outputs]
+
+    def describe(self) -> str:
+        """Human-readable report of the compiled serving artifact."""
+        cfg = self.cfg
+        lines = [f"=== repro.api session: mode=serve "
+                 f"backend={self.backend} ===",
+                 f"model: {cfg.name} ({cfg.num_layers} layers, "
+                 f"d_model={cfg.d_model}, vocab={cfg.vocab_size} "
+                 f"padded to {cfg.padded_vocab()})",
+                 f"slots: {self.num_groups} groups x {self.group_size} "
+                 f"(cache_len={self.cache_len}, "
+                 f"max_prompt_len={self.max_prompt_len}, "
+                 f"max_new_tokens={self.max_new_tokens})",
+                 self.sstaged.describe()]
+        if self.regs is not None:
+            lines.append(f"register quotas: {self.regs}")
+        return "\n".join(lines)
+
+    def __repr__(self):
+        return (f"ServeSession(backend={self.backend!r}, "
+                f"stages={self.sstaged.num_stages}, "
+                f"groups={self.num_groups}x{self.group_size})")
+
+
+def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
+                   params: Optional[Dict[str, Any]], mesh, fn_wrap,
+                   timeout: float, num_groups: Optional[int],
+                   group_size: Optional[int], cache_len: Optional[int],
+                   max_prompt_len: Optional[int],
+                   max_new_tokens: Optional[int]) -> ServeSession:
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models.model_zoo import build_model
+    from repro.models.transformer import stack_layout
+    from repro.train.steps import plan_from_mesh
+
+    if isinstance(cfg, str):
+        from repro.configs.registry import get_config
+        cfg = get_config(cfg)
+    if not isinstance(cfg, ModelConfig):
+        raise ValueError(
+            "mode='serve' compiles a repro.configs.base.ModelConfig (or an "
+            f"--arch name), got {type(cfg).__name__}")
+    num_groups = 2 if num_groups is None else num_groups
+    group_size = 2 if group_size is None else group_size
+    max_prompt_len = 64 if max_prompt_len is None else max_prompt_len
+    max_new_tokens = 64 if max_new_tokens is None else max_new_tokens
+    if num_groups < 1 or group_size < 1:
+        raise ValueError(f"num_groups={num_groups} and "
+                         f"group_size={group_size} must be >= 1")
+    if mesh is None:
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tp = plan_from_mesh(mesh).tp
+    if cache_len is None:
+        cache_len = max_prompt_len + max_new_tokens + 9
+        cache_len += -cache_len % tp
+    elif cache_len <= max_prompt_len + max_new_tokens:
+        # the last cache position is the parking slot for retired requests
+        raise ValueError(
+            f"cache_len={cache_len} must exceed max_prompt_len + "
+            f"max_new_tokens = {max_prompt_len + max_new_tokens} "
+            "(the final position is reserved for parked slots)")
+
+    lay = stack_layout(cfg)
+    n_units = len(lay.prologue) + lay.n_periods
+    if backend == "monolithic":
+        if stages not in (None, 1):
+            raise ValueError("backend='monolithic' serves the whole stack "
+                             "as one stage; use backend='actors' for "
+                             f"stages={stages}")
+        stages = 1
+    elif stages is None:
+        stages = min(2, n_units)
+
+    if params is None:
+        params = build_model(cfg, plan_from_mesh(mesh)).init(
+            jax.random.PRNGKey(0))
+    sstaged = lower_serve_stages(cfg, mesh, params, num_stages=stages,
+                                 cache_len=cache_len,
+                                 max_prompt_len=max_prompt_len,
+                                 group_size=group_size)
+    if isinstance(regs, str):
+        regs = _policy_regs(regs, stages, num_groups)
+    if backend == "monolithic":
+        if fn_wrap is not None:
+            raise ValueError("fn_wrap requires backend='actors' "
+                             "(there are no stage actors to wrap)")
+        engine = InlineServeEngine(sstaged)
+        regs = None
+    else:
+        engine = ServePipelineExecutor(sstaged, regs=regs, fn_wrap=fn_wrap)
+        regs = engine.regs if engine.regs is not None else \
+            _policy_regs("1f1b", stages, num_groups)
+    return ServeSession(cfg=cfg, mesh=mesh, backend=backend, engine=engine,
+                        sstaged=sstaged, num_groups=num_groups,
+                        group_size=group_size, cache_len=cache_len,
+                        max_prompt_len=max_prompt_len,
+                        max_new_tokens=max_new_tokens, regs=regs,
+                        timeout=timeout)
+
+
 def _resolve_partition(graph: LogicalGraph,
                        partition: Optional[StagePartition],
                        stages: Optional[int]) -> StagePartition:
@@ -373,6 +666,20 @@ def _resolve_partition(graph: LogicalGraph,
     return partition_stages(graph, stages)
 
 
+def _policy_regs(policy: str, num_stages: int, width: int) -> List[int]:
+    """Map a :data:`REG_POLICIES` name to per-stage quotas. ``width`` is
+    what ``"gpipe"`` admits everywhere: the microbatch count in graph
+    modes, the request-group count in serve mode."""
+    if policy == "1f1b":
+        return [max(1, num_stages - s) for s in range(num_stages)]
+    if policy == "gpipe":
+        return [width] * num_stages
+    if policy == "serial":
+        return [1] * num_stages
+    raise ValueError(f"unknown regs policy {policy!r}; "
+                     f"pass one of {REG_POLICIES} or an explicit list")
+
+
 def _resolve_regs(regs, partition: StagePartition, num_microbatches: int,
                   mode: str) -> Tuple[List[int], Optional[PipelinePlan]]:
     """Turn the declarative ``regs`` option into per-stage quotas.
@@ -388,21 +695,14 @@ def _resolve_regs(regs, partition: StagePartition, num_microbatches: int,
                             bwd_time=max(bwd, 1e-3))
         return list(rp.regs), rp
     if isinstance(regs, str):
-        if regs == "1f1b":
-            return [max(1, S - s) for s in range(S)], None
-        if regs == "gpipe":
-            return [num_microbatches] * S, None
-        if regs == "serial":
-            return [1] * S, None
-        raise ValueError(f"unknown regs policy {regs!r}; "
-                         f"pass one of {REG_POLICIES} or an explicit list")
+        return _policy_regs(regs, S, num_microbatches), None
     regs = list(regs)
     if len(regs) != S:
         raise ValueError(f"need {S} register quotas, got {len(regs)}")
     return regs, None
 
 
-def compile(graph: LogicalGraph, *, mode: str = "infer",
+def compile(graph, *, mode: str = "infer",
             backend: str = "actors", plan: Optional[Plan] = None,
             partition: Optional[StagePartition] = None,
             stages: Optional[int] = None, num_microbatches: int = 1,
@@ -410,9 +710,27 @@ def compile(graph: LogicalGraph, *, mode: str = "infer",
             regs=None, optimizer: Optional[OptimizerSpec] = None,
             params: Optional[Dict[str, Any]] = None, loss=None,
             lr: float = 1e-2, mesh=None, stage_meshes=None,
-            fn_wrap=None, timeout: float = 300.0) -> Session:
+            fn_wrap=None, timeout: float = 300.0,
+            num_groups: Optional[int] = None,
+            group_size: Optional[int] = None,
+            cache_len: Optional[int] = None,
+            max_prompt_len: Optional[int] = None,
+            max_new_tokens: Optional[int] = None):
     """Compile a :class:`~repro.core.graph.LogicalGraph` into a runnable
     :class:`Session` — the single frontend over every lowering/executor path.
+
+    ``mode="serve"`` instead compiles a
+    :class:`repro.configs.base.ModelConfig` (or ``--arch`` name) into a
+    :class:`ServeSession` running pipelined continuous-batching greedy
+    decode: the stack is cut into ``stages`` model shards
+    (:func:`repro.core.lowering.lower_serve_stages`), requests are packed
+    into ``num_groups * group_size`` decode slots, and
+    :meth:`ServeSession.generate` admits/retires requests mid-flight.
+    Serve-only options: ``num_groups``, ``group_size``, ``cache_len``,
+    ``max_prompt_len``, ``max_new_tokens``; ``params`` are the model params
+    (default: ``build_model(...).init(PRNGKey(0))``), ``regs`` the
+    per-stage quotas (list or policy), ``backend="monolithic"`` the
+    whole-stack single-program reference.
 
     Declarative options (everything omitted is inferred):
 
@@ -457,6 +775,31 @@ def compile(graph: LogicalGraph, *, mode: str = "infer",
     if backend not in BACKENDS:
         raise ValueError(
             f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if mode == "serve":
+        rejected = {"plan": plan, "partition": partition,
+                    "optimizer": optimizer, "loss": loss,
+                    "microbatch_inputs": microbatch_inputs,
+                    "stage_meshes": stage_meshes}
+        bad = [k for k, v in rejected.items() if v is not None]
+        if bad or num_microbatches != 1:
+            bad = bad or ["num_microbatches"]
+            raise ValueError(
+                f"{bad[0]}= is not meaningful for mode='serve' (serving "
+                "compiles a ModelConfig; schedule/optimizer options belong "
+                "to graph modes)")
+        return _compile_serve(
+            graph, backend=backend, stages=stages, regs=regs, params=params,
+            mesh=mesh, fn_wrap=fn_wrap, timeout=timeout,
+            num_groups=num_groups, group_size=group_size,
+            cache_len=cache_len, max_prompt_len=max_prompt_len,
+            max_new_tokens=max_new_tokens)
+    serve_only = {"num_groups": num_groups, "group_size": group_size,
+                  "cache_len": cache_len, "max_prompt_len": max_prompt_len,
+                  "max_new_tokens": max_new_tokens}
+    bad = [k for k, v in serve_only.items() if v is not None]
+    if bad:
+        raise ValueError(
+            f"{bad[0]}= is only meaningful for mode='serve'")
     if num_microbatches < 1:
         raise ValueError(
             f"num_microbatches must be >= 1, got {num_microbatches}")

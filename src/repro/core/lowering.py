@@ -973,3 +973,251 @@ def lower_train_stages(graph: LogicalGraph, plan: Plan,
     all_params = tuple(p.name for p in param_ts)
     return TrainStagedProgram(graph, plan, partition, stages, loss_t,
                               all_params, boundary_sbp, optimizer=optimizer)
+
+
+# ---------------------------------------------------------------------------
+# Serve lowering (paper §4.3 applied to serving): the autoregressive decode
+# step cut into per-stage jitted programs. Stage s owns a contiguous slice of
+# the layer stack; its KV/SSM caches never leave the stage — they are a
+# persistent stage-local register stream (the same pattern as the optimizer
+# state in training pipelines), updated in place by every decode fire. The
+# request-admission runtime half lives in repro.runtime.pipeline
+# (ServePipelineExecutor).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeStage:
+    """One lowered decode/prefill pipeline stage.
+
+    ``decode(params, caches, xin, pos) -> (xout, new_caches)``: one token for
+    a full slot group. ``xin`` is the token ids (B,) on the first stage, the
+    hidden (B, 1, d) elsewhere; ``xout`` is the model-sharded logits
+    (B, padded_vocab) on the last stage, the hidden elsewhere.
+
+    ``prefill(params, xin, last_index) -> (xout, slot_caches)``: run one
+    admitted request's prompt (batch-replicated, typically B=1) through the
+    slice and build its caches; the last stage returns the first-token logits
+    gathered at ``last_index`` (the prompt's final position) through the SAME
+    head math as ``decode``. ``init_caches(tok) -> caches`` allocates the
+    zeroed group cache; ``write_slot(caches, slot_caches, slot)`` scatters a
+    freshly prefilled request into slot ``slot`` of the group cache.
+    """
+
+    index: int
+    decode: Callable
+    prefill: Callable
+    init_caches: Callable
+    write_slot: Callable
+    params: Dict[str, Any]
+    units: Tuple[int, int]              # [lo, hi) over prologue+period units
+    first: bool
+    last: bool
+    mesh: object = None
+
+
+class ServeStagedProgram:
+    """A pipeline of independently-jitted decode-stage programs.
+
+    Built by :func:`lower_serve_stages`; run sequentially (num_stages == 1 is
+    the monolithic serve engine) or concurrently by
+    :class:`repro.runtime.pipeline.ServePipelineExecutor`, one actor per
+    stage, with caches as stage-local persistent state.
+    """
+
+    def __init__(self, cfg, plan, mesh, stages: List[ServeStage],
+                 cache_len: int, max_prompt_len: int, group_size: int):
+        self.cfg = cfg
+        self.plan = plan
+        self.mesh = mesh
+        self.stages = stages
+        self.cache_len = cache_len
+        self.max_prompt_len = max_prompt_len
+        self.group_size = group_size
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    #: uniform with Staged/TrainStagedProgram for _StagedExecutorBase
+    input_names: Tuple[str, ...] = ()
+
+    def describe(self) -> str:
+        lines = [f"serve pipeline: {self.num_stages} stages over "
+                 f"{self.stages[-1].units[1]} stack units "
+                 f"(cache_len={self.cache_len}, "
+                 f"group_size={self.group_size})"]
+        for st in self.stages:
+            extra = []
+            if st.first:
+                extra.append("embed")
+            if st.last:
+                extra.append("final_norm+head")
+            lines.append(f"  stage {st.index}: units "
+                         f"[{st.units[0]}, {st.units[1]})"
+                         + (f" + {'+'.join(extra)}" if extra else ""))
+        return "\n".join(lines)
+
+
+def _serve_subtree(tree, lo: int, hi: int, n_pro: int, slice_periods: bool):
+    """Slice a {"prologue": [...], "body": [per-slot stacked trees]} pytree
+    to units [lo, hi). ``slice_periods`` slices the stacked leading period
+    dim (params/caches); spec trees keep their per-slot entries whole."""
+    pro = list(tree["prologue"][lo:min(hi, n_pro)])
+    plo, phi = max(lo - n_pro, 0), max(hi - n_pro, 0)
+    body = []
+    if phi > plo:
+        if slice_periods:
+            body = [jax.tree.map(lambda a: a[plo:phi], slot)
+                    for slot in tree["body"]]
+        else:
+            body = list(tree["body"])
+    return {"prologue": pro, "body": body}
+
+
+def lower_serve_stages(cfg, mesh, params: Dict[str, Any], num_stages: int,
+                       cache_len: int, max_prompt_len: int, group_size: int,
+                       sliding_window: int = 0) -> ServeStagedProgram:
+    """Cut the decode step of a :class:`repro.configs.base.ModelConfig`
+    model into ``num_stages`` jitted stage programs (stage = contiguous
+    slice of the layer stack; tensor parallelism via shard_map *inside*
+    every stage, exactly like :func:`repro.train.steps.make_serve_step`).
+
+    ``params`` are the full model params (as built by
+    ``repro.models.model_zoo.build_model(cfg, plan).init``); each stage gets
+    its slice, plus the embedding on the first stage and the final norm +
+    unembedding head on the last.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import transformer as T
+    from repro.models.common import MeshPlan
+    from repro.models.model_zoo import cache_specs, make_decode_caches
+
+    if cfg.encoder_decoder or cfg.embed_frontend:
+        raise ValueError(
+            f"{cfg.name}: pipelined serving needs a token frontend "
+            "(encoder-decoder / embed-frontend archs are not supported)")
+    plan = MeshPlan(tuple(mesh.axis_names), tuple(mesh.devices.shape))
+    if cache_len % plan.tp:
+        raise ValueError(f"cache_len={cache_len} must be divisible by the "
+                         f"model-parallel degree {plan.tp}")
+    if group_size % plan.dp:
+        raise ValueError(f"group_size={group_size} must be divisible by the "
+                         f"data-parallel degree {plan.dp}")
+
+    lay = T.stack_layout(cfg)
+    n_pro = len(lay.prologue)
+    n_units = n_pro + lay.n_periods
+    if not (1 <= num_stages <= n_units):
+        raise ValueError(f"num_stages={num_stages} must be in [1, {n_units}] "
+                         f"(= prologue blocks + body periods for {cfg.name})")
+
+    dp = plan.data_axes if len(plan.data_axes) > 1 else plan.data_axes[0]
+    mx = plan.model_axis
+    pspecs_full = T.model_specs(cfg, plan)
+    cspecs_grp = cache_specs(cfg, plan, plan.data_axes)
+    cspecs_one = cache_specs(cfg, plan, ())
+    adt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+           "float16": jnp.float16}[cfg.dtype]
+
+    # contiguous unit ranges, balanced by count
+    sizes = [n_units // num_stages + (1 if s < n_units % num_stages else 0)
+             for s in range(num_stages)]
+    bounds, lo = [], 0
+    for sz in sizes:
+        bounds.append((lo, lo + sz))
+        lo += sz
+
+    stages: List[ServeStage] = []
+    for s, (lo, hi) in enumerate(bounds):
+        first, last = s == 0, s == num_stages - 1
+        pro_kinds = lay.prologue[lo:min(hi, n_pro)]
+        sparams = _serve_subtree(params, lo, hi, n_pro, True)
+        sspecs = _serve_subtree(pspecs_full, lo, hi, n_pro, False)
+        grp_cspecs = _serve_subtree(cspecs_grp, lo, hi, n_pro, False)
+        one_cspecs = _serve_subtree(cspecs_one, lo, hi, n_pro, False)
+        if first:
+            sparams["embed"] = params["embed"]
+            sspecs["embed"] = pspecs_full["embed"]
+        if last:
+            for k in ("final_norm", "unembed"):
+                sparams[k] = params[k]
+                sspecs[k] = pspecs_full[k]
+
+        def local_decode(p, caches, xin, pos, _first=first, _last=last,
+                         _kinds=pro_kinds):
+            if _first:
+                x = T.embed_tokens(p["embed"], xin[:, None], plan).astype(adt)
+            else:
+                x = xin
+            x, new_caches = T.decode_stack_slice(
+                p, caches, x, pos, cfg, plan, _kinds,
+                sliding_window=sliding_window)
+            if _last:
+                x = T.rms_norm(x, p["final_norm"].astype(x.dtype),
+                               cfg.norm_eps)
+                out = x[:, 0] @ p["unembed"].astype(x.dtype)
+            else:
+                out = x
+            return out, new_caches
+
+        xin_spec = P(dp)                 # token ids (B,) or hidden (B, 1, d)
+        xout_spec = P(dp, mx) if last else P(dp)
+        decode = jax.jit(shard_map(
+            local_decode, mesh=mesh,
+            in_specs=(sspecs, grp_cspecs, xin_spec, P(dp)),
+            out_specs=(xout_spec, grp_cspecs), check=False))
+
+        def local_prefill(p, xin, last_index, _first=first, _last=last,
+                          _kinds=pro_kinds):
+            if _first:
+                x = T.embed_tokens(p["embed"], xin, plan).astype(adt)
+            else:
+                x = xin
+            positions = jnp.arange(x.shape[1])
+            x, caches = T.prefill_stack_slice(
+                p, x, positions, cfg, plan, _kinds, cache_len,
+                sliding_window=sliding_window)
+            if _last:
+                x = T.rms_norm(x, p["final_norm"].astype(x.dtype),
+                               cfg.norm_eps)
+                idx = jnp.broadcast_to(last_index[:, None, None],
+                                       (x.shape[0], 1, x.shape[-1]))
+                h = jnp.take_along_axis(x, idx, axis=1)
+                out = h[:, 0] @ p["unembed"].astype(x.dtype)
+            else:
+                out = x
+            return out, caches
+
+        pre_out_spec = P(None, mx) if last else P()
+        prefill = jax.jit(shard_map(
+            local_prefill, mesh=mesh,
+            in_specs=(sspecs, P(), P()),
+            out_specs=(pre_out_spec, one_cspecs), check=False))
+
+        def local_init(tok, _lo=lo, _hi=hi):
+            full = make_decode_caches(cfg, plan, tok.shape[0], cache_len)
+            return _serve_subtree(full, _lo, _hi, n_pro, True)
+
+        init_caches = jax.jit(shard_map(
+            local_init, mesh=mesh, in_specs=(P(dp),),
+            out_specs=grp_cspecs, check=False))
+
+        def write_slot(caches, slot_caches, slot: int):
+            # prologue leaves are (B, ...); body leaves are stacked over
+            # periods, (periods, B, ...) — the batch slot is axis 1 there
+            pro = jax.tree.map(
+                lambda gc, sc: gc.at[slot].set(sc[0].astype(gc.dtype)),
+                caches["prologue"], slot_caches["prologue"])
+            body = jax.tree.map(
+                lambda gc, sc: gc.at[:, slot].set(sc[:, 0].astype(gc.dtype)),
+                caches["body"], slot_caches["body"])
+            return {"prologue": pro, "body": body}
+
+        stages.append(ServeStage(
+            index=s, decode=decode, prefill=prefill,
+            init_caches=init_caches, write_slot=write_slot,
+            params=sparams, units=(lo, hi), first=first, last=last,
+            mesh=mesh))
+    return ServeStagedProgram(cfg, plan, mesh, stages, cache_len,
+                              max_prompt_len, group_size)

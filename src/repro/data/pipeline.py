@@ -49,32 +49,42 @@ class ActorDataPipeline:
 
     def __init__(self, source: Callable[[int], np.ndarray], num_batches: int,
                  buffers: int = 2, preprocess: Callable = _augment):
-        self.out_q: "queue.Queue" = queue.Queue(maxsize=max(1, buffers))
+        self.source = source
+        self.num_batches = num_batches
+        self.buffers = buffers
+        self.preprocess = preprocess
+        self._thread: Optional[threading.Thread] = None
+        self._build()
+
+    def _build(self) -> None:
+        """Fresh actor chain + output queue (actors are single-use state
+        machines, so each epoch gets its own ThreadedRuntime)."""
+        self.out_q: "queue.Queue" = queue.Queue(maxsize=max(1, self.buffers))
         self._counter = [0]
 
         def load():
             i = self._counter[0]
             self._counter[0] += 1
-            return source(i)
+            return self.source(i)
 
         def sink(x):
             self.out_q.put(x)  # bounded queue: blocking = back-pressure
             return 0
 
         specs = [
-            ActorSpec("loader", load, (), out_regs=buffers, thread=0,
-                      max_fires=num_batches),
-            ActorSpec("preprocess", preprocess, ("loader",), out_regs=buffers,
-                      thread=1),
+            ActorSpec("loader", load, (), out_regs=self.buffers, thread=0,
+                      max_fires=self.num_batches),
+            ActorSpec("preprocess", self.preprocess, ("loader",),
+                      out_regs=self.buffers, thread=1),
             ActorSpec("stage", sink, ("preprocess",), out_regs=1, thread=2),
         ]
-        self.num_batches = num_batches
         self.rt = ThreadedRuntime(specs)
-        self._thread: Optional[threading.Thread] = None
 
     def __iter__(self) -> Iterator[np.ndarray]:
+        if self.rt.consumed:
+            self._build()
         self._thread = threading.Thread(
-            target=lambda: self.rt.run(timeout=3600), daemon=True)
+            target=lambda rt=self.rt: rt.run(timeout=3600), daemon=True)
         self._thread.start()
         for _ in range(self.num_batches):
             yield self.out_q.get()

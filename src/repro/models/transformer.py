@@ -552,3 +552,71 @@ def decode_step(params, caches, tok, pos, cfg: ModelConfig, plan: MeshPlan,
     x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
     logits_local = x[:, 0] @ params["unembed"].astype(x.dtype)
     return logits_local, {"prologue": new_pro, "body": new_body}
+
+
+# ---------------------------------------------------------------------------
+# stack slices — the building blocks of pipelined serving (one contiguous
+# chunk of the layer stack per pipeline stage, caches stage-local)
+# ---------------------------------------------------------------------------
+
+def decode_stack_slice(params, caches, x, pos, cfg: ModelConfig,
+                       plan: MeshPlan, pro_kinds, sliding_window: int = 0):
+    """One decode step over a slice of the stack.
+
+    ``params``/``caches`` hold ``"prologue"`` (a list of this slice's
+    unrolled blocks, kinds given by ``pro_kinds``) and ``"body"`` (per-slot
+    trees stacked over this slice's periods — possibly empty). x: (B, 1, d)
+    hidden entering the slice. Returns (x, new_caches); composing the slices
+    in order reproduces :func:`decode_step`'s layer loop exactly.
+    """
+    lay = stack_layout(cfg)
+    new_pro = []
+    for p_blk, cache, (kind, mlp_kind) in zip(params["prologue"],
+                                              caches["prologue"], pro_kinds):
+        x, c = decode_block(p_blk, x, cache, pos, cfg, plan, kind, mlp_kind,
+                            sliding_window)
+        new_pro.append(c)
+    new_body = caches["body"]
+    if params["body"]:
+        def one_period(x, stacked):
+            p_stk, c_stk = stacked
+            new_caches = []
+            for j, (kind, mlp_kind) in enumerate(lay.period_slots):
+                x, c = decode_block(p_stk[j], x, c_stk[j], pos, cfg, plan,
+                                    kind, mlp_kind, sliding_window)
+                new_caches.append(c)
+            return x, new_caches
+        x, new_body = jax.lax.scan(one_period, x,
+                                   (tuple(params["body"]), caches["body"]))
+    return x, {"prologue": new_pro, "body": new_body}
+
+
+def prefill_stack_slice(params, x, positions, cfg: ModelConfig,
+                        plan: MeshPlan, pro_kinds, cache_len: int,
+                        sliding_window: int = 0):
+    """Prefill over a slice of the stack (same structure as
+    :func:`decode_stack_slice`). x: (B, S, d) hidden entering the slice.
+    Returns (x, caches) with the slice's decode caches ready at position S.
+    """
+    lay = stack_layout(cfg)
+    pro_caches = []
+    for p_blk, (kind, mlp_kind) in zip(params["prologue"], pro_kinds):
+        x, _, cache = apply_block(p_blk, x, cfg, plan, kind, mlp_kind,
+                                  positions, True, sliding_window, None,
+                                  True, cache_len)
+        pro_caches.append(cache)
+    body_caches = []
+    if params["body"]:
+        def one_period(x, stacked):
+            caches = []
+            for j, (kind, mlp_kind) in enumerate(lay.period_slots):
+                x, _, cache = apply_block(stacked[j], x, cfg, plan, kind,
+                                          mlp_kind, positions, True,
+                                          sliding_window, None, True,
+                                          cache_len)
+                caches.append(cache)
+            return force_vary(x, plan.axis_names), caches
+        x, body_caches = jax.lax.scan(one_period,
+                                      force_vary(x, plan.axis_names),
+                                      tuple(params["body"]))
+    return x, {"prologue": pro_caches, "body": body_caches}

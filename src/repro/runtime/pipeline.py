@@ -40,6 +40,20 @@ from repro.runtime.scheduler import CommModel, SimResult, simulate
 from repro.runtime.threaded import ThreadedRuntime
 
 
+def _validate_regs(regs: Sequence[int], num_stages: int) -> List[int]:
+    """Reject bad quota lists up front: a zero/negative quota would deadlock
+    (or be silently rewritten), so fail fast naming the offending stage."""
+    regs = list(regs)
+    if len(regs) != num_stages:
+        raise ValueError(f"need {num_stages} register quotas, got {len(regs)}")
+    for s, r in enumerate(regs):
+        if r < 1:
+            raise ValueError(
+                f"stage {s} register quota must be >= 1, got {r} "
+                f"(regs={regs})")
+    return regs
+
+
 def pipeline_specs(num_stages: int, num_microbatches: int,
                    fwd_time: float = 1.0, bwd_time: float = 2.0,
                    regs: Optional[Sequence[int]] = None,
@@ -48,6 +62,7 @@ def pipeline_specs(num_stages: int, num_microbatches: int,
     devices. ``regs[s]`` is stage s's activation register quota."""
     if regs is None:
         regs = [num_stages - s for s in range(num_stages)]  # 1F1B default
+    regs = _validate_regs(regs, num_stages)
     specs: List[ActorSpec] = []
     specs.append(ActorSpec(
         name="data", fn=lambda *a: 0, inputs=(), out_regs=2,
@@ -58,7 +73,7 @@ def pipeline_specs(num_stages: int, num_microbatches: int,
         # forward actor on device/thread s
         specs.append(ActorSpec(
             name=f"f{s}", fn=lambda *a: 0, inputs=(fwd_in,),
-            out_regs=max(1, regs[s]), node=0, thread=s + 1,
+            out_regs=regs[s], node=0, thread=s + 1,
             duration=fwd_time, max_fires=num_microbatches,
             out_nbytes=act_nbytes))
     for s in reversed(range(num_stages)):
@@ -269,8 +284,7 @@ def stage_actor_specs(staged, inputs: Dict[str, Any],
     S = staged.num_stages
     if regs is None:
         regs = [max(1, S - s) for s in range(S)]
-    if len(regs) != S:
-        raise ValueError(f"need {S} register quotas, got {len(regs)}")
+    regs = _validate_regs(regs, S)
     missing = [n for n in staged.input_names if n not in inputs]
     if missing:
         raise ValueError(f"missing graph inputs: {missing}")
@@ -327,7 +341,7 @@ def stage_actor_specs(staged, inputs: Dict[str, Any],
         specs.append(ActorSpec(
             name=f"stage{s}", fn=fn,
             inputs=("data",) if s == 0 else (f"stage{s-1}",),
-            out_regs=max(1, regs[s]), node=0, thread=s + 1,
+            out_regs=regs[s], node=0, thread=s + 1,
             max_fires=num_microbatches))
     return specs, f"stage{S - 1}"
 
@@ -440,8 +454,7 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
     S = tstaged.num_stages
     if regs is None:
         regs = [max(1, S - s) for s in range(S)]
-    if len(regs) != S:
-        raise ValueError(f"need {S} register quotas, got {len(regs)}")
+    regs = _validate_regs(regs, S)
     missing = [n for n in tstaged.input_names if n not in inputs]
     if missing:
         raise ValueError(f"missing graph inputs: {missing}")
@@ -604,7 +617,7 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
         specs.append(ActorSpec(
             name=f"f{s}", fn=fwd_fn,
             inputs=("data",) if s == 0 else (f"f{s-1}",),
-            out_regs=max(1, regs[s]), node=0, thread=s + 1,
+            out_regs=regs[s], node=0, thread=s + 1,
             max_fires=num_microbatches))
         specs.append(ActorSpec(
             name=f"b{s}", fn=bwd_fn,
@@ -808,3 +821,191 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         self.last_grad_norm = norm
         self.step_count += 1
         return loss, grads, dict(self.params)
+
+
+# ---------------------------------------------------------------------------
+# Serving pipelines: continuous-batching decode on the actor protocol.
+#
+# Stage = contiguous model shard (repro.core.lowering.lower_serve_stages);
+# microbatch = request group. Each round streams one work item per live group
+# through the stage chain: a DecodeWork advances every slot of the group by
+# one token, a PrefillWork runs one freshly admitted request's prompt and
+# scatters its caches into the group cache. The stage's KV/SSM caches never
+# ride the payload — they are persistent stage-local state (the same pattern
+# as the AdamW state stream in training), so the only tensors crossing stages
+# are the (B, 1, d) hidden and the final logits. Overlap across groups
+# emerges from the stage out-register quotas alone (§4.3): while stage 1
+# decodes group 0, stage 0 already decodes group 1.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PrefillWork:
+    """Admit one request: run its prompt, build its slot caches.
+
+    ``tokens`` is (1, prompt_len) int32 (batch-replicated); ``last_index``
+    is the prompt's final position — the first generated token's logits are
+    gathered there through the decode head."""
+
+    group: int
+    slot: int
+    tokens: Any
+    last_index: int
+
+
+@dataclasses.dataclass
+class DecodeWork:
+    """Advance every slot of ``group`` by one token. ``tok``/``pos`` are
+    (group_size,) int32; retired slots are parked (see ServeSession)."""
+
+    group: int
+    tok: Any
+    pos: Any
+
+
+def serve_stage_apply(stage, caches: Dict[int, Any], work, xin):
+    """Run one work item through one serve stage, updating the stage's
+    per-group cache dict in place. Returns the stage's output tensor (the
+    hidden mid-pipeline, the logits on the last stage). Shared by the actor
+    executor and the monolithic serve engine so their math is identical."""
+    import jax
+    import jax.numpy as jnp
+
+    if isinstance(work, PrefillWork):
+        li = jnp.full((work.tokens.shape[0],), work.last_index, jnp.int32)
+        xout, slot_caches = stage.prefill(stage.params, xin, li)
+        xout = jax.block_until_ready(xout)
+        caches[work.group] = stage.write_slot(caches[work.group],
+                                              slot_caches, work.slot)
+    else:
+        xout, new_caches = stage.decode(stage.params, caches[work.group],
+                                        xin, work.pos)
+        xout = jax.block_until_ready(xout)
+        caches[work.group] = new_caches
+    return xout
+
+
+class _ServeEngineBase:
+    """Shared state of the two serving engines: per-stage, per-group
+    persistent caches (``caches[s][g]``, the register stream that outlives
+    every round) and round instrumentation. Keeping this in one place means
+    the actor executor and the inline monolithic reference cannot drift in
+    how they allocate or account for cache state."""
+
+    def _init_serve_state(self, sstaged) -> None:
+        self.sstaged = sstaged
+        self.caches: List[Dict[int, Any]] = [dict() for _ in sstaged.stages]
+        self.rounds = 0
+        self.total_makespan = 0.0
+
+    def ensure_group(self, group: int) -> None:
+        """Allocate the zeroed per-stage caches for a new slot group."""
+        if group in self.caches[0]:
+            return
+        import jax.numpy as jnp
+
+        tok = jnp.zeros((self.sstaged.group_size,), jnp.int32)
+        for s, stage in enumerate(self.sstaged.stages):
+            self.caches[s][group] = stage.init_caches(tok)
+
+    def _count_round(self) -> None:
+        self.rounds += 1
+        self.total_makespan += self.last_makespan
+
+
+class InlineServeEngine(_ServeEngineBase):
+    """``backend="monolithic"`` serving: the same round protocol as the
+    actor executor, run inline (no actors) over a whole-stack
+    ``lower_serve_stages(num_stages=1)`` program — the reference the
+    pipelined engine is checked against, token for token."""
+
+    def __init__(self, sstaged):
+        self._init_serve_state(sstaged)
+        self.last_makespan: Optional[float] = None
+
+    def run_round(self, work: Sequence, timeout: float = 300.0) -> List:
+        t0 = time.perf_counter()
+        results = []
+        for w in work:
+            self.ensure_group(w.group)
+            xin = w.tokens if isinstance(w, PrefillWork) else w.tok
+            for s, stage in enumerate(self.sstaged.stages):
+                xin = serve_stage_apply(stage, self.caches[s], w, xin)
+            results.append(xin)
+        self.last_makespan = time.perf_counter() - t0
+        self._count_round()
+        return results
+
+
+class ServePipelineExecutor(_StagedExecutorBase, _ServeEngineBase):
+    """Run a :class:`repro.core.lowering.ServeStagedProgram` as a pipelined
+    continuous-batching decode engine.
+
+    Holds per-stage, per-group caches across rounds (``caches[s][g]``) —
+    the persistent register stream. Each :meth:`run_round` builds a fresh
+    actor graph (actors are single-use state machines): an ``admit`` source
+    actor emits the round's work items in order, one ``stage{s}`` actor per
+    model shard consumes them FIFO, and the last stage's logits are
+    collected in emission order. ``regs[s]`` is stage s's out-register
+    quota (default ``max(1, S - s)``, the forward-pipeline schedule);
+    quota back-pressure alone bounds how many groups are in flight.
+
+    Instrumentation mirrors the other executors (``last_makespan``,
+    ``last_history``, ``last_peak_regs``) plus ``rounds`` and
+    ``total_makespan`` accumulated over the session.
+    """
+
+    def __init__(self, sstaged, regs: Optional[Sequence[int]] = None,
+                 fn_wrap: Optional[Callable] = None):
+        super().__init__(sstaged, [], 1, regs, fn_wrap)
+        if self.regs is not None:
+            self.regs = _validate_regs(self.regs, sstaged.num_stages)
+        self._init_serve_state(sstaged)
+
+    def _make_stage_fn(self, stage):
+        def run_stage(payload):
+            work = payload["work"]
+            xin = payload.get("x")
+            if xin is None:                       # first stage: token ids in
+                xin = (work.tokens if isinstance(work, PrefillWork)
+                       else work.tok)
+            xout = serve_stage_apply(stage, self.caches[stage.index],
+                                     work, xin)
+            if stage.last:
+                return {"work": work, "logits": xout}
+            return {"work": work, "x": xout}
+        return run_stage
+
+    def run_round(self, work: Sequence, timeout: float = 300.0) -> List:
+        """Stream ``work`` (PrefillWork/DecodeWork items) through the stage
+        actors; returns the last stage's logits, one entry per item in
+        submission order."""
+        if not work:
+            return []
+        work = list(work)
+        for w in work:
+            self.ensure_group(w.group)
+        S = self.sstaged.num_stages
+        regs = self.regs if self.regs is not None else \
+            [max(1, S - s) for s in range(S)]
+        regs = _validate_regs(regs, S)
+
+        specs: List[ActorSpec] = [ActorSpec(
+            name="admit", fn=lambda version: {"work": work[version]},
+            inputs=(), out_regs=2, node=0, thread=0,
+            max_fires=len(work), wants_version=True)]
+        for s, stage in enumerate(self.sstaged.stages):
+            fn = self._make_stage_fn(stage)
+            if self.fn_wrap is not None:
+                fn = self.fn_wrap(s, fn)
+            specs.append(ActorSpec(
+                name=f"stage{s}", fn=fn,
+                inputs=("admit",) if s == 0 else (f"stage{s-1}",),
+                out_regs=regs[s], node=0, thread=s + 1,
+                max_fires=len(work)))
+        outs = self._execute(specs, f"stage{S - 1}", timeout)
+        if len(outs) != len(work):
+            raise RuntimeError(f"collected {len(outs)} round results, "
+                               f"expected {len(work)}")
+        self._count_round()
+        # the final stage fires in FIFO submission order on one thread
+        return [o["logits"] for o in outs]

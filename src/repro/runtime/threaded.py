@@ -51,6 +51,13 @@ class ThreadedRuntime:
         self._threads: List[threading.Thread] = []
         self._errors: List[BaseException] = []
         self._t0 = time.perf_counter()
+        self._consumed = False
+
+    @property
+    def consumed(self) -> bool:
+        """True once :meth:`run` has been called — the actors are spent and
+        this instance cannot run again (callers rebuild instead)."""
+        return self._consumed
 
     def _key_of(self, actor_id: int) -> Tuple[int, int]:
         return (node_of(actor_id), thread_of(actor_id))
@@ -111,7 +118,18 @@ class ThreadedRuntime:
 
         Returns the collected outputs: a flat list when a single actor name
         was given, else ``{name: [outputs...]}``.
+
+        Single-use: actors are consumable state machines (their fire counts
+        and register refcounts are spent by the run), so a second ``run()``
+        on the same instance raises — build a fresh :class:`ThreadedRuntime`
+        per run, as the per-step executors do.
         """
+        if self._consumed:
+            raise RuntimeError(
+                "runtime already consumed: ThreadedRuntime.run() is "
+                "single-use (actors are spent state machines); build a new "
+                "ThreadedRuntime per run")
+        self._consumed = True
         bounded = [a for a in self.by_name.values() if a.spec.max_fires is not None]
         if not bounded:
             raise ValueError("threaded runtime needs at least one bounded actor")

@@ -268,10 +268,25 @@ class ServeStep:
     prefill_fn: Any
     decode_fn: Any
     init_caches_fn: Any
+    logits_fn: Any          # (params, h_last) -> logits, the decode head
     param_specs: Any
     cache_specs_: Any
     batch_specs: Dict
     plan: MeshPlan
+
+
+def greedy_from_logits(logits, vocab_size: int):
+    """Greedy token selection over a padded vocabulary.
+
+    The unembedding is padded to ``cfg.padded_vocab()`` columns, so a bare
+    argmax can emit padding ids >= ``vocab_size`` (junk the tokenizer cannot
+    decode). Mask the padding columns to -inf first; the result is always a
+    valid id < ``vocab_size``.
+    """
+    logits = jnp.asarray(logits)
+    mask = jnp.arange(logits.shape[-1]) >= vocab_size
+    return jnp.argmax(jnp.where(mask, -jnp.inf, logits),
+                      axis=-1).astype(jnp.int32)
 
 
 def make_serve_step(cfg: ModelConfig, mesh, cache_len: int,
@@ -316,8 +331,18 @@ def make_serve_step(cfg: ModelConfig, mesh, cache_len: int,
         shard_map(local_init_caches, mesh=mesh, in_specs=(P(dp),),
                   out_specs=cspecs, check=False))
 
-    return ServeStep(prefill_fn, decode_fn, init_caches_fn, pspecs, cspecs,
-                     bspecs, plan)
+    def local_logits(params, h_last):
+        # the decode-step head, bit for bit (decode_step's final matmul):
+        # prefill's first-token logits must come from THIS program, not a
+        # host-side h @ unembed that skips the shard_map and promotes dtypes
+        return h_last[:, 0] @ params["unembed"].astype(h_last.dtype)
+
+    logits_fn = jax.jit(
+        shard_map(local_logits, mesh=mesh, in_specs=(pspecs, P(dp)),
+                  out_specs=P(dp, plan.model_axis), check=False))
+
+    return ServeStep(prefill_fn, decode_fn, init_caches_fn, logits_fn,
+                     pspecs, cspecs, bspecs, plan)
 
 
 # ---------------------------------------------------------------------------

@@ -170,6 +170,22 @@ class TestThreadedRuntime:
         with pytest.raises(RuntimeError, match="kaboom"):
             ThreadedRuntime(specs).run(timeout=10.0)
 
+    def test_run_is_single_use(self):
+        """A second run() on the same instance would reuse exhausted actors
+        and accumulate threads/outputs — the contract is one runtime per
+        run, enforced with a clear error."""
+        specs = [
+            ActorSpec("src", _noop, (), out_regs=2, max_fires=3, thread=0),
+            ActorSpec("sink", lambda x: x, ("src",), out_regs=1, thread=1),
+        ]
+        rt = ThreadedRuntime(specs, collect_outputs_of="sink")
+        assert len(rt.run(timeout=30.0)) == 3
+        with pytest.raises(RuntimeError, match="already consumed"):
+            rt.run(timeout=30.0)
+        # per-run executors build a fresh runtime instead
+        rt2 = ThreadedRuntime(specs, collect_outputs_of="sink")
+        assert len(rt2.run(timeout=30.0)) == 3
+
 
 class TestPipelineSchedules:
     def test_1f1b_memory_vs_gpipe(self):
@@ -191,3 +207,11 @@ class TestPipelineSchedules:
         S, M = 3, 12
         spans = [analyze(S, M, regs=[r] * S).makespan for r in (1, 2, 3, 6)]
         assert all(a >= b - 1e-9 for a, b in zip(spans, spans[1:]))
+
+    def test_zero_quota_rejected(self):
+        """A zero/negative quota must fail fast naming the stage, not be
+        silently clamped to 1 (which hid planner bugs)."""
+        with pytest.raises(ValueError, match=r"stage 1 .* got 0"):
+            pipeline_specs(3, 8, regs=[2, 0, 1])
+        with pytest.raises(ValueError, match=r"stage 0 .* got -1"):
+            pipeline_specs(2, 8, regs=[-1, 1])

@@ -69,6 +69,24 @@ class TestDataPipeline:
             next(it)
         assert len(produced) == 20
 
+    def test_reiteration_rebuilds_actor_chain(self):
+        """Actors are single-use state machines; a second epoch must get a
+        fresh chain (and keep delivering), not hang on spent actors."""
+        from repro.data.pipeline import ActorDataPipeline
+
+        seen = []
+
+        def src(i):
+            seen.append(i)
+            return np.full((1, 4), i, np.int32)
+
+        pipe = ActorDataPipeline(src, num_batches=3, buffers=2)
+        first = list(pipe)
+        second = list(pipe)
+        assert len(first) == len(second) == 3
+        # the source index restarts per epoch
+        assert seen == [0, 1, 2, 0, 1, 2]
+
 
 class TestDryrunParser:
     def test_wire_bytes_factors(self):
