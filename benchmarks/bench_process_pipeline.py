@@ -1,0 +1,163 @@
+"""Process-backed actor runtime vs the threaded runtime, same pipelines.
+
+Two workloads, both compiled twice through the public API with only the
+``runtime=`` option changed:
+
+* train: a 4-stage 1F1B AdamW pipeline (global-norm clipping) stepped in
+  lockstep — ``runtime="processes"`` puts each stage's actors in their own
+  OS worker process, with activations/cotangents crossing real process
+  boundaries as host arrays;
+* serve: 2-stage continuous batching (2 groups x 2 slots, 8 requests of
+  unequal length) — prefill/decode rounds drive the same worker pool.
+
+Both are correctness-gated before timing: train sessions must be *bitwise*
+equal to a fresh monolithic reference (loss, post-clip grads, params, opt
+state — ``api.assert_sessions_match``), serve token streams must be
+identical to the monolithic engine token for token.
+
+The interesting number is the transport overhead: the process runtime pays
+pickling + pipes + host round-trips for every cross-node edge (per-step
+bytes recorded from ``last_edge_bytes``), where the threaded runtime passes
+device arrays by reference. Writes ``BENCH_process_pipeline.json`` so the
+overhead trajectory is recorded across PRs.
+"""
+import json
+import os
+import pathlib
+import sys
+import time
+
+STAGES = 4
+BATCH, WIDTH, MICROBATCHES = 16, 32, 4
+SERVE_STAGES = 2
+PROMPT_LEN = 8
+GENS = [6, 3, 5, 4, 6, 2, 4, 6]
+
+
+def _train_graph():
+    from repro.core.graph import LogicalGraph
+    from repro.core.placement import Placement
+
+    g = LogicalGraph(Placement(("d",), (1,), device_kind="cpu"))
+    h = g.input("x", (BATCH, WIDTH))
+    labels = g.input("labels", (BATCH,), dtype="int32")
+    for i in range(STAGES):
+        w = g.input(f"w{i}", (WIDTH, WIDTH))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < STAGES - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+    return g
+
+
+def main():
+    sys.path.insert(0, "src")
+    import dataclasses
+
+    import numpy as np
+
+    from benchmarks._util import emit
+    from repro import api
+    from repro.core.lowering import OptimizerSpec
+
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    reps = 2 if smoke else 6
+
+    # ---- train: 4-stage 1F1B AdamW, threads vs processes -------------------
+    rng = np.random.default_rng(0)
+    params = {f"w{i}": (rng.normal(size=(WIDTH, WIDTH)) * 0.5
+                        ).astype(np.float32) for i in range(STAGES)}
+    data = {"x": rng.normal(size=(BATCH, WIDTH)).astype(np.float32),
+            "labels": rng.integers(0, WIDTH, (BATCH,)).astype(np.int32)}
+    opt = OptimizerSpec.adamw(lr=1e-2, grad_clip=0.5)
+    kw = dict(mode="train", stages=STAGES, num_microbatches=MICROBATCHES,
+              optimizer=opt)
+
+    def mono():
+        return api.compile(_train_graph(), backend="monolithic",
+                           params=dict(params), optimizer=opt, mode="train",
+                           num_microbatches=MICROBATCHES)
+
+    results = {}
+    edge_bytes = {}
+    for runtime in ("threads", "processes"):
+        sess = api.compile(_train_graph(), runtime=runtime,
+                           params=dict(params), **kw)
+        # correctness gate: bitwise vs a fresh monolithic reference
+        api.assert_sessions_match(sess, mono(), data, steps=2)
+        spans = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sess.step(**data)
+            spans.append(time.perf_counter() - t0)
+        spans.sort()
+        results[runtime] = spans[len(spans) // 2]
+        edge_bytes[runtime] = dict(sess.executor.last_edge_bytes)
+        sess.close()
+
+    overhead = results["processes"] / results["threads"]
+    step_bytes = sum(edge_bytes["processes"].values())
+    for runtime in ("threads", "processes"):
+        emit(f"process_pipeline/train_{runtime}",
+             1e6 * results[runtime],
+             f"steps_per_s={1.0 / results[runtime]:.2f}")
+    emit("process_pipeline/train_overhead", 1e6 * (
+        results["processes"] - results["threads"]),
+        f"x{overhead:.2f};edge_bytes_per_step={step_bytes}")
+
+    # ---- serve: 2-stage continuous batching, threads vs processes ----------
+    from repro.configs.registry import get_config
+
+    cfg = get_config("qwen2.5-3b").reduced()
+    cfg = dataclasses.replace(cfg, vocab_size=1000)
+    srng = np.random.default_rng(1)
+    requests = [
+        (srng.integers(0, cfg.vocab_size, (PROMPT_LEN,)).astype(np.int32), g)
+        for g in GENS]
+    total = sum(GENS)
+    serve_kw = dict(mode="serve", num_groups=2, group_size=2,
+                    max_prompt_len=PROMPT_LEN, max_new_tokens=max(GENS))
+    ref = api.compile(cfg, backend="monolithic", **serve_kw
+                      ).generate(requests)
+
+    tok_s = {}
+    for runtime in ("threads", "processes"):
+        sess = api.compile(cfg, runtime=runtime, stages=SERVE_STAGES,
+                           **serve_kw)
+        best = None
+        for _ in range(reps + 1):      # first rep is the jit warmup
+            outs = sess.generate(requests)
+            # correctness gate: token-identical to the monolithic engine
+            assert all(np.array_equal(a, b)
+                       for a, b in zip(outs, ref)), runtime
+            span = sess.last_stats["wall_s"]
+            best = span if best is None else min(best, span)
+        tok_s[runtime] = total / best
+        sess.close()
+        emit(f"process_pipeline/serve_{runtime}", 1e6 * total / tok_s[runtime],
+             f"tok_s={tok_s[runtime]:.1f}")
+
+    out = {
+        "train": {
+            "stages": STAGES, "microbatches": MICROBATCHES,
+            "threads_step_s": results["threads"],
+            "processes_step_s": results["processes"],
+            "overhead_x": overhead,
+            "edge_bytes_per_step": step_bytes,
+            "edges": {f"{a}->{b}": v
+                      for (a, b), v in sorted(edge_bytes["processes"].items())},
+        },
+        "serve": {
+            "stages": SERVE_STAGES, "requests": len(GENS),
+            "total_tokens": total,
+            "threads_tok_s": tok_s["threads"],
+            "processes_tok_s": tok_s["processes"],
+        },
+    }
+    path = pathlib.Path(__file__).resolve().parent.parent / \
+        "BENCH_process_pipeline.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+
+
+if __name__ == "__main__":
+    main()

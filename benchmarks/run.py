@@ -16,6 +16,9 @@ subprocesses with placeholder host devices (the main process keeps 1 device).
   §4.3 serve-> bench_serve_pipeline       (subprocess; also writes
               BENCH_serve_pipeline.json: serialized single-request decode
               vs pipelined continuous batching, tok/s)
+  §5 Fig 7/8-> bench_process_pipeline     (subprocess; also writes
+              BENCH_process_pipeline.json: threaded vs process-backed
+              runtime on the same train/serve pipelines, bitwise-gated)
 
 ``--smoke`` runs only the BENCH_*.json-writing benchmarks, one repetition
 each (BENCH_SMOKE=1), so CI keeps the recording code paths honest without
@@ -32,7 +35,8 @@ import traceback
 
 
 BENCH_WRITERS = ("bench_actor_pipeline", "bench_1f1b_train",
-                 "bench_1f1b_adamw", "bench_serve_pipeline")
+                 "bench_1f1b_adamw", "bench_serve_pipeline",
+                 "bench_process_pipeline")
 
 
 def main() -> None:

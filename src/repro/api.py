@@ -26,11 +26,15 @@ cost-balanced), register quotas via
 resource planning, §2.3), ``microbatch_inputs`` as the non-param graph
 inputs in train mode.
 
-``backend="actors"`` runs stages as actors on the threaded runtime (1F1B
-emerging from register quotas, §4.3/§6.5); ``backend="monolithic"`` runs the
-same :class:`Session` surface over whole-graph jitted programs
-(``lower_plan`` / ``lower_train_plan``) with identical microbatch chunking,
-so pipeline-vs-monolithic bit-identity checks are one-liners
+``backend="actors"`` runs stages as actors (1F1B emerging from register
+quotas, §4.3/§6.5) on a runtime chosen by ``runtime=``: ``"threads"`` drives
+every actor on OS threads in this process, ``"processes"`` gives each
+pipeline stage its own worker process (paper Fig 7/8 — the node field of the
+64-bit actor address becomes a real OS process) with payloads crossing
+stages over a real transport. ``backend="monolithic"`` runs the same
+:class:`Session` surface over whole-graph jitted programs (``lower_plan`` /
+``lower_train_plan``) with identical microbatch chunking, so
+pipeline-vs-monolithic bit-identity checks are one-liners
 (:func:`assert_sessions_match`).
 """
 from __future__ import annotations
@@ -45,11 +49,14 @@ from repro.core.lowering import (OptimizerSpec, lower_plan, lower_serve_stages,
                                  lower_train_stages, reassemble_sinks,
                                  split_microbatches)
 from repro.core.planner import Plan, plan as plan_sbp
+from repro.runtime.base import RUNTIME_KINDS
 from repro.runtime.pipeline import (ActorPipelineExecutor, DecodeWork,
                                     InlineServeEngine, PipelinePlan,
                                     PrefillWork, ServePipelineExecutor,
                                     TrainPipelineExecutor, check_run_inputs,
                                     plan_registers)
+from repro.runtime.recipes import (InferRecipe, MeshSpec, ServeRecipe,
+                                   TrainRecipe)
 
 MODES = ("infer", "train", "serve")
 BACKENDS = ("actors", "monolithic")
@@ -227,10 +234,11 @@ class Session:
                  regs: Optional[List[int]], reg_plan: Optional[PipelinePlan],
                  optimizer: Optional[OptimizerSpec],
                  microbatch_inputs: List[str], num_microbatches: int,
-                 timeout: float = 300.0):
+                 timeout: float = 300.0, runtime: Optional[str] = None):
         self.graph = graph
         self.mode = mode
         self.backend = backend
+        self.runtime = runtime        # "threads"/"processes"; None: monolithic
         self.plan = plan
         self.partition = partition
         self.regs = regs
@@ -282,6 +290,20 @@ class Session:
             raise RuntimeError("load_params() on an inference session")
         self._engine.load_params(params)
 
+    def close(self) -> None:
+        """Release the engine's workers (actor threads or worker processes).
+        Monolithic engines have none; the call is a no-op there."""
+        close = getattr(self._engine, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
     def run(self, **inputs) -> Dict[str, Any]:
         """Execute the compiled inference program over ``inputs`` (one
         keyword per graph input) and return ``{sink name: value}``."""
@@ -326,8 +348,9 @@ class Session:
         """Human-readable report of the compiled artifact: graph shape, SBP
         plan, stage partition + register quotas, optimizer."""
         g = self.graph
+        rt = f" runtime={self.runtime}" if self.runtime is not None else ""
         lines = [f"=== repro.api session: mode={self.mode} "
-                 f"backend={self.backend} ===",
+                 f"backend={self.backend}{rt} ===",
                  f"graph: {len(g.ops)} ops, "
                  f"inputs {[t.name for t in g.inputs]}, "
                  f"sinks {[t.name for t in self._sinks]}",
@@ -396,11 +419,13 @@ class ServeSession:
     def __init__(self, *, cfg, mesh, backend: str, engine, sstaged,
                  num_groups: int, group_size: int, cache_len: int,
                  max_prompt_len: int, max_new_tokens: int,
-                 regs: Optional[List[int]], timeout: float = 300.0):
+                 regs: Optional[List[int]], timeout: float = 300.0,
+                 runtime: Optional[str] = None):
         self.cfg = cfg
         self.mesh = mesh
         self.mode = "serve"
         self.backend = backend
+        self.runtime = runtime        # "threads"/"processes"; None: monolithic
         self.sstaged = sstaged
         self.num_groups = num_groups
         self.group_size = group_size
@@ -423,6 +448,19 @@ class ServeSession:
     @property
     def last_makespan(self) -> Optional[float]:
         return self._engine.last_makespan
+
+    def close(self) -> None:
+        """Release the engine's workers (no-op for the inline engine)."""
+        close = getattr(self._engine, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     @staticmethod
     def _normalize(requests) -> List[ServeRequest]:
@@ -551,8 +589,9 @@ class ServeSession:
     def describe(self) -> str:
         """Human-readable report of the compiled serving artifact."""
         cfg = self.cfg
+        rt = f" runtime={self.runtime}" if self.runtime is not None else ""
         lines = [f"=== repro.api session: mode=serve "
-                 f"backend={self.backend} ===",
+                 f"backend={self.backend}{rt} ===",
                  f"model: {cfg.name} ({cfg.num_layers} layers, "
                  f"d_model={cfg.d_model}, vocab={cfg.vocab_size} "
                  f"padded to {cfg.padded_vocab()})",
@@ -576,7 +615,8 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                    timeout: float, num_groups: Optional[int],
                    group_size: Optional[int], cache_len: Optional[int],
                    max_prompt_len: Optional[int],
-                   max_new_tokens: Optional[int]) -> ServeSession:
+                   max_new_tokens: Optional[int],
+                   runtime: str = "threads") -> ServeSession:
     import jax
 
     from repro.configs.base import ModelConfig
@@ -637,8 +677,19 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                              "(there are no stage actors to wrap)")
         engine = InlineServeEngine(sstaged)
         regs = None
+        runtime = None
     else:
-        engine = ServePipelineExecutor(sstaged, regs=regs, fn_wrap=fn_wrap)
+        recipe = None
+        if runtime == "processes":
+            # workers re-lower from data: ship host copies of the params and
+            # the mesh as device ids (repro.runtime.recipes)
+            recipe = ServeRecipe(cfg, jax.device_get(params),
+                                 num_stages=stages, cache_len=cache_len,
+                                 max_prompt_len=max_prompt_len,
+                                 group_size=group_size,
+                                 mesh=MeshSpec.capture(mesh))
+        engine = ServePipelineExecutor(sstaged, regs=regs, fn_wrap=fn_wrap,
+                                       runtime=runtime, recipe=recipe)
         regs = engine.regs if engine.regs is not None else \
             _policy_regs("1f1b", stages, num_groups)
     return ServeSession(cfg=cfg, mesh=mesh, backend=backend, engine=engine,
@@ -646,7 +697,7 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                         group_size=group_size, cache_len=cache_len,
                         max_prompt_len=max_prompt_len,
                         max_new_tokens=max_new_tokens, regs=regs,
-                        timeout=timeout)
+                        timeout=timeout, runtime=runtime)
 
 
 def _resolve_partition(graph: LogicalGraph,
@@ -703,7 +754,8 @@ def _resolve_regs(regs, partition: StagePartition, num_microbatches: int,
 
 
 def compile(graph, *, mode: str = "infer",
-            backend: str = "actors", plan: Optional[Plan] = None,
+            backend: str = "actors", runtime: Optional[str] = None,
+            plan: Optional[Plan] = None,
             partition: Optional[StagePartition] = None,
             stages: Optional[int] = None, num_microbatches: int = 1,
             microbatch_inputs: Optional[Sequence[str]] = None,
@@ -740,6 +792,14 @@ def compile(graph, *, mode: str = "infer",
       actors with register-quota back-pressure (§4.3); ``"monolithic"`` —
       one whole-graph jitted program with identical microbatch semantics
       (the bit-identity reference).
+    * ``runtime`` (actors backend only): ``"threads"`` (default) drives the
+      actors on OS threads in this process; ``"processes"`` spawns one
+      worker process per pipeline stage — stage state (placed params,
+      optimizer state, serve caches) lives in the owning worker, payloads
+      cross stages as serialized host arrays, and each worker re-lowers its
+      stages from a picklable recipe (:mod:`repro.runtime.recipes`). With
+      ``"processes"``, ``fn_wrap`` and a schedule-callable ``lr`` must be
+      picklable (module-level, not lambdas/closures).
     * ``plan``: an SBP :class:`~repro.core.planner.Plan`; default
       :func:`repro.core.planner.plan` (Table-2 boxing-cost minimization).
     * ``partition`` / ``stages``: an explicit
@@ -775,6 +835,16 @@ def compile(graph, *, mode: str = "infer",
     if backend not in BACKENDS:
         raise ValueError(
             f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if runtime is not None and runtime not in RUNTIME_KINDS:
+        raise ValueError(
+            f"unknown runtime {runtime!r}; expected one of {RUNTIME_KINDS}")
+    if backend == "monolithic" and runtime is not None:
+        raise ValueError(
+            "runtime= requires backend='actors' (the monolithic backend "
+            "runs one jitted program in-process, there is no actor runtime "
+            "to choose)")
+    if runtime is None and backend == "actors":
+        runtime = "threads"
     if mode == "serve":
         rejected = {"plan": plan, "partition": partition,
                     "optimizer": optimizer, "loss": loss,
@@ -792,7 +862,7 @@ def compile(graph, *, mode: str = "infer",
             mesh=mesh, fn_wrap=fn_wrap, timeout=timeout,
             num_groups=num_groups, group_size=group_size,
             cache_len=cache_len, max_prompt_len=max_prompt_len,
-            max_new_tokens=max_new_tokens)
+            max_new_tokens=max_new_tokens, runtime=runtime)
     serve_only = {"num_groups": num_groups, "group_size": group_size,
                   "cache_len": cache_len, "max_prompt_len": max_prompt_len,
                   "max_new_tokens": max_new_tokens}
@@ -872,26 +942,44 @@ def compile(graph, *, mode: str = "infer",
 
     part = _resolve_partition(graph, partition, stages)
     regs, reg_plan = _resolve_regs(regs, part, num_microbatches, mode)
+    # the recipe captures the *user's* mesh choice (None -> each worker
+    # defaults to graph.placement.to_mesh() itself, device-table agnostic)
+    mesh_spec = MeshSpec.capture(mesh)
+    stage_mesh_specs = (None if stage_meshes is None else
+                        tuple(MeshSpec.capture(m) for m in stage_meshes))
     if mesh is None and stage_meshes is None:
         mesh = graph.placement.to_mesh()
     if mode == "infer":
         staged = lower_stages(graph, plan, part, mesh=mesh,
                               stage_meshes=stage_meshes)
+        recipe = None
+        if runtime == "processes":
+            recipe = InferRecipe(graph, plan, part, mesh=mesh_spec,
+                                 stage_meshes=stage_mesh_specs)
         engine = ActorPipelineExecutor(staged, microbatch_inputs,
                                        num_microbatches, regs=regs,
-                                       fn_wrap=fn_wrap)
+                                       fn_wrap=fn_wrap, runtime=runtime,
+                                       recipe=recipe)
     else:
         tstaged = lower_train_stages(graph, plan, part, list(params),
                                      loss=loss, mesh=mesh,
                                      stage_meshes=stage_meshes,
                                      optimizer=optimizer)
+        recipe = None
+        if runtime == "processes":
+            recipe = TrainRecipe(graph, plan, part, list(params), loss=loss,
+                                 mesh=mesh_spec,
+                                 stage_meshes=stage_mesh_specs,
+                                 optimizer=optimizer)
         engine = TrainPipelineExecutor(tstaged, params, microbatch_inputs,
                                        num_microbatches, lr=lr, regs=regs,
-                                       fn_wrap=fn_wrap, optimizer=optimizer)
+                                       fn_wrap=fn_wrap, optimizer=optimizer,
+                                       runtime=runtime, recipe=recipe)
     return Session(graph=graph, mode=mode, backend=backend, engine=engine,
                    plan=plan, partition=part, regs=regs, reg_plan=reg_plan,
                    optimizer=optimizer, microbatch_inputs=microbatch_inputs,
-                   num_microbatches=num_microbatches, timeout=timeout)
+                   num_microbatches=num_microbatches, timeout=timeout,
+                   runtime=runtime)
 
 
 def _assert_tree_equal(name: str, a, b, context: str) -> None:

@@ -57,8 +57,9 @@ class ActorDataPipeline:
         self._build()
 
     def _build(self) -> None:
-        """Fresh actor chain + output queue (actors are single-use state
-        machines, so each epoch gets its own ThreadedRuntime)."""
+        """Persistent actor chain: built once, re-run per epoch. Actors reset
+        at the start of each run; the loader's ``on_epoch`` hook rewinds the
+        batch counter so every epoch replays the same stream."""
         self.out_q: "queue.Queue" = queue.Queue(maxsize=max(1, self.buffers))
         self._counter = [0]
 
@@ -71,9 +72,12 @@ class ActorDataPipeline:
             self.out_q.put(x)  # bounded queue: blocking = back-pressure
             return 0
 
+        def rewind(_ctx):
+            self._counter[0] = 0
+
         specs = [
             ActorSpec("loader", load, (), out_regs=self.buffers, thread=0,
-                      max_fires=self.num_batches),
+                      max_fires=self.num_batches, on_epoch=rewind),
             ActorSpec("preprocess", self.preprocess, ("loader",),
                       out_regs=self.buffers, thread=1),
             ActorSpec("stage", sink, ("preprocess",), out_regs=1, thread=2),
@@ -81,8 +85,9 @@ class ActorDataPipeline:
         self.rt = ThreadedRuntime(specs)
 
     def __iter__(self) -> Iterator[np.ndarray]:
-        if self.rt.consumed:
-            self._build()
+        # a fresh output queue per epoch (sink reads the attribute at call
+        # time), so an abandoned iteration can't leak stale batches
+        self.out_q = queue.Queue(maxsize=max(1, self.buffers))
         self._thread = threading.Thread(
             target=lambda rt=self.rt: rt.run(timeout=3600), daemon=True)
         self._thread.start()

@@ -1,9 +1,15 @@
 from repro.runtime.actor import Actor, ActorSpec, build_actors
+from repro.runtime.base import (RUNTIME_KINDS, Runtime, SpecBuilder,
+                                WorkerError, encode_payload, make_runtime)
 from repro.runtime.messages import Ack, Req, make_actor_id, parse_actor_id
-from repro.runtime.pipeline import (ActorPipelineExecutor,
-                                    TrainPipelineExecutor, analyze,
-                                    pipeline_specs, plan_registers,
-                                    stage_actor_specs,
+from repro.runtime.pipeline import (ActorPipelineExecutor, InferSpecBuilder,
+                                    ServePipelineExecutor, ServeSpecBuilder,
+                                    TrainPipelineExecutor, TrainSpecBuilder,
+                                    analyze, pipeline_specs, plan_registers,
+                                    serve_stage_actor_specs, stage_actor_specs,
                                     train_stage_actor_specs)
+from repro.runtime.process import ProcessRuntime
+from repro.runtime.recipes import (InferRecipe, MeshSpec, ServeRecipe,
+                                   TrainRecipe)
 from repro.runtime.scheduler import CommModel, SimResult, Simulator, simulate
 from repro.runtime.threaded import ThreadedRuntime

@@ -21,7 +21,7 @@ import dataclasses
 import itertools
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.runtime.messages import Ack, Req, make_actor_id
+from repro.runtime.messages import Ack, Req, make_actor_id, payload_nbytes
 
 
 @dataclasses.dataclass
@@ -40,6 +40,10 @@ class ActorSpec:
     out_nbytes: int = 0                     # for comm cost in sim mode
     wants_version: bool = False             # fn also receives version= kwarg
     emit_every: int = 1                     # emit output every k-th fire only
+    on_epoch: Optional[Callable[[Any], None]] = None
+    # ^ per-epoch context hook: a persistent runtime calls it with this
+    #   actor's slice of the run() ctx before any fire of the new epoch
+    #   (None when the epoch carries nothing for this actor)
 
 
 _reg_counter = itertools.count(1)
@@ -54,6 +58,7 @@ class Actor:
         self.actor_id = actor_id
         # consumers: list of (consumer_actor_id, channel_name)
         self.consumers = list(consumers)
+        self.consumer_names: Dict[int, str] = {}    # filled by build_actors
         # in-register state: channel -> FIFO of Req (holding payload refs)
         self.in_queues: Dict[str, collections.deque] = {
             ch: collections.deque() for ch in spec.inputs}
@@ -63,26 +68,52 @@ class Actor:
         self.reg_payload: Dict[int, Any] = {}
         self.fired = 0
         self.version = 0
+        self.epoch = 0
+        self.max_fires = spec.max_fires             # per-epoch override target
+        self.last_nbytes = 0                        # bytes of the last payload
         # instrumentation
         self.peak_regs_in_use = 0
         self.history: List[Tuple[float, float]] = []   # (start, end) of actions
+        self.edge_bytes: Dict[str, int] = {}        # consumer name -> bytes sent
+
+    def reset(self, max_fires: Optional[int] = None) -> None:
+        """Start a new epoch: fire/version counters, in-flight registers and
+        instrumentation are cleared so a persistent runtime can reuse the
+        actor across runs. ``max_fires`` overrides the spec's bound for this
+        epoch only (serve rounds vary their work count)."""
+        self.in_queues = {ch: collections.deque() for ch in self.spec.inputs}
+        self.out_counter = self.spec.out_regs
+        self.refcount.clear()
+        self.reg_payload.clear()
+        self.fired = 0
+        self.version = 0
+        self.epoch += 1
+        self.max_fires = (self.spec.max_fires if max_fires is None
+                          else max_fires)
+        self.last_nbytes = 0
+        self.peak_regs_in_use = 0
+        self.history = []
+        self.edge_bytes = {}
 
     # -- message handling -------------------------------------------------------
     def on_req(self, msg: Req) -> None:
         self.in_queues[msg.channel].append(msg)
 
-    def on_ack(self, msg: Ack) -> None:
+    def on_ack(self, msg: Ack) -> bool:
+        """Returns True when the ack recycled the register (last reference)."""
         self.refcount[msg.reg_id] -= 1
         if self.refcount[msg.reg_id] == 0:
             # register recycled: memory quota returns (paper: out counter += 1)
             del self.refcount[msg.reg_id]
             del self.reg_payload[msg.reg_id]
             self.out_counter += 1
+            return True
+        return False
 
     # -- firing -------------------------------------------------------------------
     @property
     def exhausted(self) -> bool:
-        return self.spec.max_fires is not None and self.fired >= self.spec.max_fires
+        return self.max_fires is not None and self.fired >= self.max_fires
 
     @property
     def emitted_last_fire(self) -> bool:
@@ -133,6 +164,9 @@ class Actor:
         else:
             self.refcount[reg_id] = nrefs
             self.reg_payload[reg_id] = out
+        # real payload size when measurable, the spec's static estimate
+        # otherwise (the simulator's dummy payloads carry no arrays)
+        self.last_nbytes = payload_nbytes(out) or self.spec.out_nbytes
         in_use = self.spec.out_regs - self.out_counter
         self.peak_regs_in_use = max(self.peak_regs_in_use, in_use)
         v = self.version
@@ -140,8 +174,12 @@ class Actor:
         return out, acks, reg_id if nrefs else -1
 
     def emit_reqs(self, out: Any, reg_id: int, version: int) -> List[Req]:
+        nbytes = self.last_nbytes
+        for cid, _ in self.consumers:
+            name = self.consumer_names.get(cid, str(cid))
+            self.edge_bytes[name] = self.edge_bytes.get(name, 0) + nbytes
         return [Req(src=self.actor_id, dst=cid, reg_id=reg_id, channel=ch,
-                    payload=out, version=version, nbytes=self.spec.out_nbytes)
+                    payload=out, version=version, nbytes=nbytes)
                 for cid, ch in self.consumers]
 
 
@@ -164,9 +202,11 @@ def build_actors(specs: Sequence[ActorSpec]):
             if producer_name not in ids:
                 raise ValueError(f"{s.name} consumes unknown actor {producer_name}")
             consumers[producer_name].append((ids[s.name], producer_name))
+    names_by_id = {aid: name for name, aid in ids.items()}
     by_name, by_id = {}, {}
     for s in specs:
         a = Actor(s, ids[s.name], consumers.get(s.name, ()))
+        a.consumer_names = {cid: names_by_id[cid] for cid, _ in a.consumers}
         by_name[s.name] = a
         by_id[a.actor_id] = a
     return by_name, by_id

@@ -1,0 +1,151 @@
+"""The Runtime seam: one protocol over the threaded and process runtimes.
+
+The executors in :mod:`repro.runtime.pipeline` never name a concrete runtime
+class; they hold a *spec builder* (a callable returning ``(specs,
+collect_outputs_of)``) and ask :func:`make_runtime` for a :class:`Runtime`.
+A runtime is built ONCE per executor and reused across steps/rounds — actors
+are resettable state machines (:meth:`repro.runtime.actor.Actor.reset`), so
+each :meth:`Runtime.run` starts a fresh *epoch* over the same actor graph:
+
+* per-epoch inputs arrive through ``ctx`` (``{actor name: value}``), applied
+  by each actor's ``ActorSpec.on_epoch`` hook before any fire;
+* per-epoch fire bounds arrive through ``fires`` (``{actor name: count}``,
+  e.g. a serve round's work count), overriding ``ActorSpec.max_fires``;
+* persistent per-stage state (placed params, optimizer state, serve caches)
+  lives in the actor closures — resident wherever the actor runs, never
+  round-tripping through the driver.
+
+For ``kind="processes"`` the builder must be picklable: it is shipped to one
+worker process per node id (paper Fig 7/8 — the node field of the 64-bit
+actor address becomes a real OS process) and re-lowers its stages there.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+RUNTIME_KINDS = ("threads", "processes")
+
+#: builder protocol: () -> (List[ActorSpec], collect_outputs_of)
+SpecBuilder = Callable[[], Tuple[List[Any], Any]]
+
+
+class WorkerError(RuntimeError):
+    """A worker process died or raised; carries the remote traceback text."""
+
+    def __init__(self, message: str, node: Optional[int] = None,
+                 remote_traceback: Optional[str] = None):
+        super().__init__(message)
+        self.node = node
+        self.remote_traceback = remote_traceback
+
+
+class RemoteTraceback(Exception):
+    """Re-raised as the __cause__ of a WorkerError so the worker-side frames
+    appear chained under the driver-side raise."""
+
+    def __str__(self):
+        return "\n" + self.args[0] if self.args else ""
+
+
+def encode_payload(payload: Any) -> Any:
+    """Prepare a register payload for crossing a node (process) boundary:
+    device arrays become host numpy arrays, containers are rebuilt, and
+    private top-level dict keys (``"__"``-prefixed, e.g. the stashed vjp
+    closure a forward actor shares with its same-node backward actor) are
+    stripped — they are same-node contracts, never wire format."""
+    if isinstance(payload, dict):
+        return {k: _encode(v) for k, v in payload.items()
+                if not (isinstance(k, str) and k.startswith("__"))}
+    return _encode(payload)
+
+
+def _encode(v: Any) -> Any:
+    import numpy as np
+
+    if isinstance(v, dict):
+        return {k: _encode(x) for k, x in v.items()}
+    if isinstance(v, tuple):
+        if hasattr(v, "_fields"):        # NamedTuple (e.g. AdamWState)
+            return type(v)(*(_encode(x) for x in v))
+        return tuple(_encode(x) for x in v)
+    if isinstance(v, list):
+        return [_encode(x) for x in v]
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return dataclasses.replace(v, **{
+            f.name: _encode(getattr(v, f.name))
+            for f in dataclasses.fields(v)})
+    try:
+        import jax
+        if isinstance(v, jax.Array):
+            return np.asarray(v)
+    except ImportError:        # pragma: no cover - jax is always present here
+        pass
+    return v
+
+
+class Runtime:
+    """What the executors program against (duck-typed base; the concrete
+    runtimes are :class:`repro.runtime.threaded.ThreadedRuntime` and
+    :class:`repro.runtime.process.ProcessRuntime`).
+
+    ``run(ctx=, fires=, timeout=)`` executes one epoch and returns the
+    collected outputs (a flat list for a single collected actor, else
+    ``{name: [outputs...]}``). After each run the instrumentation of the
+    epoch is available as ``last_history`` (per-actor action intervals),
+    ``last_peak_regs`` (per-actor peak out-registers in use),
+    ``last_edge_bytes`` (``{(producer, consumer): bytes}`` traffic) and
+    ``last_fired`` (per-actor fire counts). ``close()`` releases workers.
+    """
+
+    last_history: Dict[str, List[Tuple[float, float]]]
+    last_peak_regs: Dict[str, int]
+    last_edge_bytes: Dict[Tuple[str, str], int]
+    last_fired: Dict[str, int]
+
+    def run(self, ctx: Optional[Dict[str, Any]] = None,
+            fires: Optional[Dict[str, int]] = None,
+            timeout: float = 120.0):
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def _check_epoch_names(specs, ctx, fires) -> None:
+    known = {s.name for s in specs}
+    for what, d in (("ctx", ctx), ("fires", fires)):
+        for name in (d or {}):
+            if name not in known:
+                raise ValueError(
+                    f"{what} names unknown actor {name!r}; "
+                    f"actors: {sorted(known)}")
+
+
+def make_runtime(kind: str, builder: SpecBuilder,
+                 collect_outputs_of=None) -> Runtime:
+    """Build a runtime of ``kind`` over the actor graph ``builder`` yields.
+
+    ``"threads"`` calls the builder in-process and drives every actor on OS
+    threads; ``"processes"`` ships the (picklable) builder to one worker
+    process per node id. ``collect_outputs_of`` overrides the builder's own
+    collect choice when given.
+    """
+    if kind not in RUNTIME_KINDS:
+        raise ValueError(
+            f"unknown runtime {kind!r}; expected one of {RUNTIME_KINDS}")
+    if kind == "threads":
+        from repro.runtime.threaded import ThreadedRuntime
+        specs, collect = builder()
+        if collect_outputs_of is not None:
+            collect = collect_outputs_of
+        return ThreadedRuntime(specs, collect_outputs_of=collect)
+    from repro.runtime.process import ProcessRuntime
+    return ProcessRuntime(builder, collect_outputs_of=collect_outputs_of)

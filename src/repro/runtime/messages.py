@@ -44,6 +44,26 @@ def thread_of(actor_id: int) -> int:
     return parse_actor_id(actor_id)[1]
 
 
+def payload_nbytes(payload: Any) -> int:
+    """Best-effort byte count of a register payload: array leaves summed
+    recursively through dicts/sequences/dataclasses. Non-array leaves
+    (closures, ints, None) count as zero — the number feeds instrumentation
+    (``Req.nbytes``, per-edge traffic), not allocation."""
+    if payload is None:
+        return 0
+    nb = getattr(payload, "nbytes", None)
+    if nb is not None and not callable(nb):
+        return int(nb)
+    if isinstance(payload, dict):
+        return sum(payload_nbytes(v) for v in payload.values())
+    if isinstance(payload, (list, tuple)):
+        return sum(payload_nbytes(v) for v in payload)
+    if dataclasses.is_dataclass(payload) and not isinstance(payload, type):
+        return sum(payload_nbytes(getattr(payload, f.name))
+                   for f in dataclasses.fields(payload))
+    return 0
+
+
 @dataclasses.dataclass
 class Req:
     """Producer -> consumer: a register holds a newly produced tensor."""

@@ -15,7 +15,7 @@ compile-time resource planner: it simulates quotas and picks the smallest one
 within ``tolerance`` of the best makespan — this is the "resource planning at
 compile time" the paper argues for (§2.3), done with the actor model itself.
 
-Two executors then run *real compiled programs* under that protocol:
+Three executors then run *real compiled programs* under that protocol:
 
 * :func:`stage_actor_specs` / :class:`ActorPipelineExecutor` — forward-only
   pipelines over the per-stage jitted programs of
@@ -28,6 +28,20 @@ Two executors then run *real compiled programs* under that protocol:
   `acc` op) sum per-microbatch gradients, and optimizer actors fire once per
   step. The 1F1B schedule is never written down: it emerges from the forward
   quota ``R[s] = num_stages - s`` alone (§4.3, §6.5).
+* :func:`serve_stage_actor_specs` / :class:`ServePipelineExecutor` —
+  continuous-batching decode with per-stage caches as actor-local state.
+
+Every executor builds its actor graph ONCE (a picklable *spec builder*) and
+drives it through the :class:`repro.runtime.base.Runtime` seam: actors are
+resettable state machines, each run/step/round is one *epoch* over the same
+graph, with per-epoch inputs delivered via ``ctx`` (routed to
+``ActorSpec.on_epoch`` hooks) and per-epoch fire bounds via ``fires``.
+Persistent per-stage state — placed params, optimizer state, serve caches —
+lives in the actor closures, resident wherever the actor runs. Stage ``s``
+is addressed at node ``s + 1`` (data/admit/norm at node 0), so under
+``runtime="processes"`` each stage owns a real worker process and payloads
+cross stages as serialized host arrays (:func:`repro.runtime.base
+.encode_payload`) while same-node registers stay zero-copy.
 """
 from __future__ import annotations
 
@@ -36,8 +50,8 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime.actor import ActorSpec
+from repro.runtime.base import RUNTIME_KINDS, make_runtime
 from repro.runtime.scheduler import CommModel, SimResult, simulate
-from repro.runtime.threaded import ThreadedRuntime
 
 
 def _validate_regs(regs: Sequence[int], num_stages: int) -> List[int]:
@@ -150,10 +164,10 @@ def plan_registers(num_stages: int, num_microbatches: int,
 #
 # This is the seam the paper argues for: the compiler's per-stage jitted
 # callables (repro.core.lowering.lower_stages) become real ActorSpec.fn
-# bodies. One actor per stage, on its own OS thread; microbatch payloads flow
-# through Req.payload as {tensor name: value} dicts along the stage chain;
-# out-register quotas alone bound in-flight microbatches, so 1F1B-style
-# overlap *emerges* (§4.3) instead of being scheduled explicitly.
+# bodies. One actor per stage, owned by node s+1 of the runtime; microbatch
+# payloads flow through Req.payload as {tensor name: value} dicts along the
+# stage chain; out-register quotas alone bound in-flight microbatches, so
+# 1F1B-style overlap *emerges* (§4.3) instead of being scheduled explicitly.
 # ---------------------------------------------------------------------------
 
 def check_run_inputs(provided, expected, what: str = "input",
@@ -187,20 +201,58 @@ def check_run_inputs(provided, expected, what: str = "input",
             f"expected {what}s: {sorted(expected)}")
 
 
+class _SpecBuilderBase:
+    """Base of the picklable spec builders the executors hand to
+    :func:`repro.runtime.base.make_runtime`.
+
+    Carries either an already-lowered program (``staged``, process-local —
+    what ``runtime="threads"`` uses directly) or a lowering recipe
+    (:mod:`repro.runtime.recipes`, pure data). Pickling for a worker process
+    drops the lowered program and ships the recipe; the worker re-lowers on
+    arrival and jit-compiles only the stages it fires.
+    """
+
+    def __init__(self, staged=None, recipe=None):
+        if staged is None and recipe is None:
+            raise ValueError("spec builder needs a lowered program or a "
+                             "lowering recipe")
+        self._staged = staged
+        self.recipe = recipe
+
+    @property
+    def staged(self):
+        if self._staged is None:
+            self._staged = self.recipe.lower()
+        return self._staged
+
+    def __getstate__(self):
+        if self.recipe is None:
+            raise ValueError(
+                "this spec builder carries only a process-local lowered "
+                "program; runtime='processes' needs a lowering recipe "
+                "(repro.runtime.recipes) — compile through repro.api")
+        state = dict(self.__dict__)
+        state["_staged"] = None      # workers re-lower from the recipe
+        return state
+
+
 class _StagedExecutorBase:
-    """Shared machinery of the two stage-pipeline executors.
+    """Shared machinery of the stage-pipeline executors.
 
     Construction-time validation (microbatch count, register-quota length,
-    microbatch input names), run-time input validation
-    (:func:`check_run_inputs`), and per-run instrumentation — everything that
-    was once copy-pasted between :class:`ActorPipelineExecutor` and
-    :class:`TrainPipelineExecutor` lives here, so new executors (multi-node,
-    serving batching) inherit one uniform contract.
+    microbatch input names, runtime kind), run-time input validation
+    (:func:`check_run_inputs`), and the persistent runtime underneath: the
+    executor builds ONE :class:`repro.runtime.base.Runtime` from its spec
+    builder on first use and re-runs it per step/round (one epoch each),
+    with per-epoch values delivered through ``ctx``/``fires``. Per-run
+    instrumentation (``last_makespan``, ``last_history``, ``last_peak_regs``,
+    ``last_edge_bytes``) snapshots the most recent epoch.
     """
 
     def __init__(self, program, microbatch_inputs: Sequence[str],
                  num_microbatches: int, regs: Optional[Sequence[int]],
-                 fn_wrap: Optional[Callable] = None):
+                 fn_wrap: Optional[Callable] = None,
+                 runtime: str = "threads", recipe=None):
         if num_microbatches < 1:
             raise ValueError(
                 f"num_microbatches must be >= 1, got {num_microbatches}")
@@ -212,34 +264,72 @@ class _StagedExecutorBase:
         for n in microbatch_inputs:
             if n not in program.input_names:
                 raise ValueError(f"{n} is not a graph input")
+        if runtime not in RUNTIME_KINDS:
+            raise ValueError(
+                f"unknown runtime {runtime!r}; expected one of "
+                f"{RUNTIME_KINDS}")
+        if runtime == "processes" and recipe is None:
+            raise ValueError(
+                "runtime='processes' needs a picklable lowering recipe "
+                "(repro.runtime.recipes) — compile through repro.api, or "
+                "pass recipe=")
         self.microbatch_inputs = list(microbatch_inputs)
         self.num_microbatches = num_microbatches
         self.regs = regs
         self.fn_wrap = fn_wrap
+        self.runtime_kind = runtime
+        self.recipe = recipe
+        self._rt = None
         self.last_makespan: Optional[float] = None
         self.last_history: Dict[str, List[Tuple[float, float]]] = {}
         self.last_peak_regs: Dict[str, int] = {}
+        self.last_edge_bytes: Dict[Tuple[str, str], int] = {}
 
-    def _execute(self, specs: List[ActorSpec], collect, timeout: float):
-        """Run one actor graph to completion, recording wall-clock makespan,
-        per-actor action history, and peak out-registers in use."""
-        rt = ThreadedRuntime(specs, collect_outputs_of=collect)
+    def _make_builder(self):
+        raise NotImplementedError
+
+    @property
+    def runtime(self):
+        """The persistent :class:`repro.runtime.base.Runtime` underneath
+        (built on first use)."""
+        if self._rt is None:
+            self._rt = make_runtime(self.runtime_kind, self._make_builder())
+        return self._rt
+
+    def _run_rt(self, ctx, fires, timeout: float):
+        """Run one epoch over the persistent runtime, snapshotting
+        wall-clock makespan, per-actor action history, peak out-registers,
+        and per-edge payload traffic."""
+        rt = self.runtime
         t0 = time.perf_counter()
-        outs = rt.run(timeout=timeout)
+        outs = rt.run(ctx=ctx, fires=fires, timeout=timeout)
         self.last_makespan = time.perf_counter() - t0
-        self.last_history = {name: list(a.history)
-                             for name, a in rt.by_name.items()}
-        self.last_peak_regs = {name: a.peak_regs_in_use
-                               for name, a in rt.by_name.items()}
+        self.last_history = dict(rt.last_history)
+        self.last_peak_regs = dict(rt.last_peak_regs)
+        self.last_edge_bytes = dict(rt.last_edge_bytes)
         return outs
+
+    def close(self) -> None:
+        """Release the runtime's workers (threads or processes). The
+        executor rebuilds it lazily if used again."""
+        if self._rt is not None:
+            self._rt.close()
+            self._rt = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 def _bind_placed(stage, bound: Dict[str, Any]):
-    """Pre-place the build-time-bound inputs (weights) on the stage's mesh
-    once — they are constant for the whole run, so transferring them per
-    microbatch fire would be pure waste. Returns the placed ``bound`` plus a
-    name->sharding map for per-fire placement of streamed payload entries
-    (both empty no-ops when all stages share one mesh)."""
+    """Pre-place the epoch-bound inputs (weights) on the stage's mesh once
+    per rebind — they are constant for the whole run, so transferring them
+    per microbatch fire would be pure waste. Returns the placed ``bound``
+    plus a name->sharding map for per-fire placement of streamed payload
+    entries (both empty no-ops when all stages share one mesh)."""
     if stage.in_shardings is None:
         return bound, {}
     import jax
@@ -262,40 +352,73 @@ def _place_incoming(input_names, bound: Dict[str, Any],
             for n in input_names]
 
 
-def stage_actor_specs(staged, inputs: Dict[str, Any],
-                      microbatch_inputs: Sequence[str],
+def _stage_binding(stage):
+    """Persistent bound-input state for one stage actor: a ``bound`` dict
+    the closures read at fire time and an ``on_epoch`` hook that (re)binds
+    the values the driver sent in ``ctx`` — placed on the stage's mesh in
+    the worker that OWNS the stage, so weights live device-resident where
+    they are used and never round-trip through the driver between epochs."""
+    bound: Dict[str, Any] = {}
+    shard_of = ({} if stage.in_shardings is None
+                else dict(zip(stage.input_names, stage.in_shardings)))
+
+    def on_epoch(raw):
+        if not raw:
+            return
+        import jax
+
+        for n, v in raw.items():
+            bound[n] = jax.device_put(v, shard_of[n]) if n in shard_of else v
+    return bound, shard_of, on_epoch
+
+
+def _payload_source_spec(name: str, max_fires: int) -> ActorSpec:
+    """The streaming source actor: emits one pre-split payload dict per
+    version. The payload list is per-epoch state, delivered via ``ctx``."""
+    cell: Dict[str, Any] = {"payloads": []}
+
+    def on_epoch(v):
+        if v is not None:
+            cell["payloads"] = list(v)
+
+    return ActorSpec(
+        name=name, fn=lambda version: cell["payloads"][version], inputs=(),
+        out_regs=2, node=0, thread=0, max_fires=max_fires,
+        wants_version=True, on_epoch=on_epoch)
+
+
+def stage_actor_specs(staged, microbatch_inputs: Sequence[str],
                       num_microbatches: int,
                       regs: Optional[Sequence[int]] = None,
                       fn_wrap: Optional[Callable[[int, Callable], Callable]] = None,
                       ) -> Tuple[List[ActorSpec], str]:
-    """Build the actor graph executing ``staged`` over microbatches.
+    """Build the persistent actor graph executing ``staged`` over
+    microbatches.
 
-    ``staged`` is a :class:`repro.core.lowering.StagedProgram`. ``inputs``
-    maps every graph-input name to its value; names in ``microbatch_inputs``
-    are split into ``num_microbatches`` equal chunks along axis 0 and streamed
-    by a source actor, the rest (weights) are bound to their stages at build
-    time. ``regs[s]`` is stage s's out-register quota (default: 1F1B,
+    ``staged`` is a :class:`repro.core.lowering.StagedProgram`. The graph is
+    built once and re-run per epoch: each run's inputs arrive via ``ctx`` —
+    ``ctx["data"]`` is the pre-split microbatch payload list (one dict per
+    version, :func:`repro.core.lowering.split_microbatches`), and
+    ``ctx[f"stage{s}"]`` the stage's non-streamed graph inputs (weights),
+    which the owning worker places on the stage mesh at epoch start.
+    ``regs[s]`` is stage s's out-register quota (default: 1F1B,
     ``num_stages - s``). ``fn_wrap(stage_index, fn)`` optionally decorates
     each stage body (benchmarks use it to emulate device latency).
 
-    Returns ``(specs, final_stage_name)`` — collect the final stage's outputs
-    to reassemble the sinks.
+    Stage ``s`` lives at node ``s + 1`` (the data source at node 0), so the
+    process runtime gives each stage its own worker.
+
+    Returns ``(specs, final_stage_name)`` — collect the final stage's
+    outputs to reassemble the sinks.
     """
     S = staged.num_stages
     if regs is None:
         regs = [max(1, S - s) for s in range(S)]
     regs = _validate_regs(regs, S)
-    missing = [n for n in staged.input_names if n not in inputs]
-    if missing:
-        raise ValueError(f"missing graph inputs: {missing}")
     mb_names = list(microbatch_inputs)
     for n in mb_names:
         if n not in staged.input_names:
             raise ValueError(f"{n} is not a graph input")
-
-    # pre-split the streamed inputs: source actor emits payload dict k
-    from repro.core.lowering import split_microbatches
-    payloads = split_microbatches(inputs, mb_names, num_microbatches)
 
     # which payload entries each stage must forward to later consumers: any
     # tensor needed by a stage after s still travels the chain at s's output
@@ -307,14 +430,10 @@ def stage_actor_specs(staged, inputs: Dict[str, Any],
                          if n in mb_names or n not in graph_inputs}
         needed_after[s] = needed_after[s + 1] | payload_borne
 
-    specs: List[ActorSpec] = []
-    specs.append(ActorSpec(
-        name="data", fn=lambda version: payloads[version], inputs=(),
-        out_regs=2, node=0, thread=0, max_fires=num_microbatches,
-        wants_version=True))
+    specs: List[ActorSpec] = [_payload_source_spec("data", num_microbatches)]
 
-    def make_stage_fn(stage, bound):
-        bound, shard_of = _bind_placed(stage, bound)
+    def make_stage_fn(stage):
+        bound, shard_of, on_epoch = _stage_binding(stage)
 
         def run_stage(payload):
             import jax
@@ -327,56 +446,82 @@ def stage_actor_specs(staged, inputs: Dict[str, Any],
                        if n in needed_after[stage.index + 1] or n in sink_names}
             carried.update(zip(stage.output_names, outs))
             return carried
-        return run_stage
+        return run_stage, on_epoch
 
     for s, stage in enumerate(staged.stages):
-        # weights and other non-streamed graph inputs are bound at build time;
-        # everything else arrives in the payload dict (microbatch chunks and
-        # boundary tensors from earlier stages)
-        bound = {n: inputs[n] for n in stage.input_names
-                 if n in graph_inputs and n not in mb_names}
-        fn = make_stage_fn(stage, bound)
+        fn, on_epoch = make_stage_fn(stage)
         if fn_wrap is not None:
             fn = fn_wrap(s, fn)
         specs.append(ActorSpec(
             name=f"stage{s}", fn=fn,
             inputs=("data",) if s == 0 else (f"stage{s-1}",),
-            out_regs=regs[s], node=0, thread=s + 1,
-            max_fires=num_microbatches))
+            out_regs=regs[s], node=s + 1, thread=0,
+            max_fires=num_microbatches, on_epoch=on_epoch))
     return specs, f"stage{S - 1}"
 
 
-class ActorPipelineExecutor(_StagedExecutorBase):
-    """Run a :class:`StagedProgram` on the threaded actor runtime.
+class InferSpecBuilder(_SpecBuilderBase):
+    """Picklable builder of the forward-pipeline actor graph."""
 
-    Each call builds a fresh actor graph (actors are single-use state
-    machines), streams ``num_microbatches`` chunks through it, and
-    reassembles the graph sinks by concatenating per-microbatch results along
-    axis 0. ``last_makespan`` / ``last_history`` expose the wall-clock
-    schedule of the most recent run.
+    def __init__(self, microbatch_inputs: Sequence[str],
+                 num_microbatches: int, regs=None, fn_wrap=None,
+                 staged=None, recipe=None):
+        super().__init__(staged=staged, recipe=recipe)
+        self.microbatch_inputs = list(microbatch_inputs)
+        self.num_microbatches = num_microbatches
+        self.regs = None if regs is None else list(regs)
+        self.fn_wrap = fn_wrap
+
+    def __call__(self):
+        return stage_actor_specs(self.staged, self.microbatch_inputs,
+                                 self.num_microbatches, regs=self.regs,
+                                 fn_wrap=self.fn_wrap)
+
+
+class ActorPipelineExecutor(_StagedExecutorBase):
+    """Run a :class:`StagedProgram` on the actor runtime.
+
+    The actor graph is built once; each :meth:`run` is one epoch over it:
+    the pre-split microbatch payloads and the per-stage bound inputs
+    (weights) travel in ``ctx``, ``num_microbatches`` chunks stream through
+    the stage chain, and the graph sinks are reassembled by concatenating
+    per-microbatch results along axis 0. ``last_makespan`` /
+    ``last_history`` expose the wall-clock schedule of the most recent run.
     """
 
     def __init__(self, staged, microbatch_inputs: Sequence[str],
                  num_microbatches: int, regs: Optional[Sequence[int]] = None,
-                 fn_wrap: Optional[Callable] = None):
+                 fn_wrap: Optional[Callable] = None,
+                 runtime: str = "threads", recipe=None):
         super().__init__(staged, microbatch_inputs, num_microbatches, regs,
-                         fn_wrap)
+                         fn_wrap, runtime=runtime, recipe=recipe)
         self.staged = staged
+
+    def _make_builder(self):
+        return InferSpecBuilder(self.microbatch_inputs, self.num_microbatches,
+                                regs=self.regs, fn_wrap=self.fn_wrap,
+                                staged=self.staged, recipe=self.recipe)
 
     def run(self, inputs: Dict[str, Any], timeout: float = 300.0) -> Tuple:
         check_run_inputs(inputs, self.staged.input_names)
-        specs, final = stage_actor_specs(
-            self.staged, inputs, self.microbatch_inputs,
-            self.num_microbatches, regs=self.regs, fn_wrap=self.fn_wrap)
-        outs = self._execute(specs, final, timeout)
+        from repro.core.lowering import reassemble_sinks, split_microbatches
+
+        graph_inputs = set(self.staged.input_names)
+        mb = set(self.microbatch_inputs)
+        ctx: Dict[str, Any] = {
+            "data": split_microbatches(inputs, self.microbatch_inputs,
+                                       self.num_microbatches)}
+        for stage in self.staged.stages:
+            ctx[f"stage{stage.index}"] = {
+                n: inputs[n] for n in stage.input_names
+                if n in graph_inputs and n not in mb}
+        outs = self._run_rt(ctx, None, timeout)
         if len(outs) != self.num_microbatches:
             raise RuntimeError(
                 f"collected {len(outs)} microbatch results, expected "
                 f"{self.num_microbatches}")
-        # the final stage fires in version order on one thread, so ``outs``
+        # the final stage fires in version order in one worker, so ``outs``
         # is already microbatch-ordered
-        from repro.core.lowering import reassemble_sinks
-
         return reassemble_sinks(self.staged.graph, self.staged.sinks,
                                 self.microbatch_inputs, outs)
 
@@ -391,53 +536,72 @@ class ActorPipelineExecutor(_StagedExecutorBase):
 # BOTH the boundary activations for f{s+1} AND the vjp closure (residuals)
 # for b{s}; it is recycled only when both have acked — capping that quota at
 # R[s] = S - s is all it takes for the 1F1B schedule to emerge.
+#
+# Stage s's actors (f, b, acc, opt, state) all live at node s+1, one worker
+# mailbox — so the stage's params, optimizer state and gradient accumulator
+# are node-local closure state, updated in place by the opt actor and never
+# shipped between steps. "__"-prefixed payload keys (the vjp closure, the
+# grad stream) are same-node contracts: repro.runtime.base.encode_payload
+# strips them at node boundaries.
 # ---------------------------------------------------------------------------
 
 _VJP_KEY = "__vjp__"
+_GRADS_KEY = "__grads__"
 
 
-def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
-                            microbatch_inputs: Sequence[str],
+def _train_collect_names(tstaged) -> List[str]:
+    """The collect list shared by the builder and the executor: the
+    loss-bearing backward actor first, then every ``opt{s}``."""
+    produced_at = {n: st.index for st in tstaged.stages
+                   for n in st.output_names}
+    loss_stage = produced_at[tstaged.loss_name]
+    return [f"b{loss_stage}"] + [f"opt{st.index}" for st in tstaged.stages
+                                 if st.param_names]
+
+
+def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
                             num_microbatches: int, lr: float = 1e-2,
                             regs: Optional[Sequence[int]] = None,
                             fn_wrap: Optional[Callable] = None,
                             optimizer=None,
-                            opt_states: Optional[Dict[int, Any]] = None,
-                            step_index: int = 0,
-                            placed_params: Optional[Dict[int, Dict[str, Any]]] = None,
                             ) -> Tuple[List[ActorSpec], List[str]]:
-    """Build the fwd/bwd/opt actor graph executing one training step.
+    """Build the persistent fwd/bwd/opt actor graph for training steps.
 
-    ``tstaged`` is a :class:`repro.core.lowering.TrainStagedProgram`.
-    ``inputs`` maps every graph-input name (params included) to its value;
-    names in ``microbatch_inputs`` are split into ``num_microbatches`` chunks
-    along axis 0 and streamed by the source actor, everything else is bound
-    at build time. ``regs[s]`` is forward stage s's out-register quota
-    (default 1F1B, ``num_stages - s``); backward/acc/opt actors need no
-    tuning. ``fn_wrap(kind, stage_index, fn)`` with kind in
-    ``{"fwd", "bwd"}`` optionally decorates the stage bodies (benchmarks use
-    it to emulate device latency).
+    ``tstaged`` is a :class:`repro.core.lowering.TrainStagedProgram`. The
+    graph is built once and re-run per step (one epoch each); per-step
+    values arrive via ``ctx``:
+
+    * ``ctx["data"]`` — the pre-split microbatch payload list;
+    * ``ctx[f"f{s}"]`` — values to (re)bind on stage s: its non-microbatch
+      data inputs every step, plus its params on the first step (or after a
+      ``load_params``). The owning worker places them on the stage mesh;
+      afterwards ``opt{s}`` updates the same bound dict in place, so params
+      stay device-resident in the worker across steps.
+    * ``ctx[f"opt{s}"]`` — the step index (resolves the lr schedule).
+
+    ``regs[s]`` is forward stage s's out-register quota (default 1F1B,
+    ``num_stages - s``); backward/acc/opt actors need no tuning.
+    ``fn_wrap(kind, stage_index, fn)`` with kind in ``{"fwd", "bwd"}``
+    optionally decorates the stage bodies.
 
     The optimizer subsystem (paper §3.3 partial-value + §4.3 actors):
 
     * ``optimizer`` is a :class:`repro.core.lowering.OptimizerSpec` (falls
-      back to ``tstaged.optimizer``, then plain SGD at ``lr``). Its lr
-      schedule is resolved at ``step_index`` on the host.
+      back to ``tstaged.optimizer``, then plain SGD at ``lr``).
     * With ``optimizer.grad_clip`` > 0, every ``acc{s}`` emits its
       stage-local squared-norm partials alongside the summed gradients, and
       a ``norm`` actor — OneFlow's P→B boxing expressed as an actor — sums
       the partials in canonical param order and broadcasts the clip scale
       sideways to every ``opt{s}``.
     * With a stateful optimizer (AdamW), a ``state{s}`` source actor emits
-      the current per-stage optimizer state (``opt_states[s]``, fresh when
-      None) as a register that ``opt{s}`` consumes — the second register
-      stream; the updated state rides the opt actor's output payload.
-    * ``placed_params[s]``, when given, are the stage's param values already
-      placed on its mesh (the executor re-binds them across steps instead of
-      transferring from host every step).
+      the stage's current optimizer state as a register that ``opt{s}``
+      consumes — the second register stream. The state lives in the stage's
+      worker across steps (initialized on the first step); the updated copy
+      also rides the opt actor's output payload so the driver can mirror it.
 
     Gradients are accumulated in fp32 regardless of the backward dtype
-    (matching the optimizer kernels' fp32 math).
+    (matching the optimizer kernels' fp32 math); the accumulator is reset
+    at every epoch start by its ``on_epoch`` hook.
 
     Returns ``(specs, collect_names)``: ``collect_names[0]`` is the backward
     actor of the loss-producing stage (the per-microbatch loss stream), the
@@ -447,7 +611,7 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
     import jax
     import jax.numpy as jnp
 
-    from repro.core.lowering import OptimizerSpec, split_microbatches
+    from repro.core.lowering import OptimizerSpec
     from repro.optim.adamw import (clip_scale, global_norm_from_partials,
                                    scale_grad, sqnorm_partials)
 
@@ -455,26 +619,17 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
     if regs is None:
         regs = [max(1, S - s) for s in range(S)]
     regs = _validate_regs(regs, S)
-    missing = [n for n in tstaged.input_names if n not in inputs]
-    if missing:
-        raise ValueError(f"missing graph inputs: {missing}")
     mb_names = list(microbatch_inputs)
     for n in mb_names:
         if n not in tstaged.input_names:
             raise ValueError(f"{n} is not a graph input")
-    payloads = split_microbatches(inputs, mb_names, num_microbatches)
 
     opt = optimizer if optimizer is not None else (
         tstaged.optimizer if tstaged.optimizer is not None
         else OptimizerSpec.sgd(lr))
-    lr_now = opt.lr_at(step_index)
     clip = bool(opt.grad_clip)
     param_order = tstaged.param_names
     param_stages = [st.index for st in tstaged.stages if st.param_names]
-    if opt.stateful and opt_states is None:
-        opt_states = {st.index: opt.init_state({n: inputs[n]
-                                                for n in st.param_names})
-                      for st in tstaged.stages if st.param_names}
 
     graph_inputs = set(tstaged.input_names)
     loss_name = tstaged.loss_name
@@ -504,13 +659,11 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
             if any(c >= s for c in consumers):
                 out_cot_names[s].add(n)
 
-    specs: List[ActorSpec] = []
-    specs.append(ActorSpec(
-        name="data", fn=lambda version: payloads[version], inputs=(),
-        out_regs=2, node=0, thread=0, max_fires=num_microbatches,
-        wants_version=True))
+    specs: List[ActorSpec] = [_payload_source_spec("data", num_microbatches)]
 
-    def make_fwd_fn(stage, bound, shard_of):
+    def make_fwd_fn(stage):
+        bound, shard_of, on_epoch = _stage_binding(stage)
+
         def run_fwd(payload):
             incoming = _place_incoming(stage.input_names, bound, shard_of,
                                        payload)
@@ -521,7 +674,7 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
             carried.update(zip(stage.output_names, outs))
             carried[_VJP_KEY] = vjp
             return carried
-        return run_fwd
+        return run_fwd, bound, on_epoch
 
     def make_bwd_fn(stage):
         def run_bwd(f_payload, b_payload=None):
@@ -543,32 +696,48 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
                 if n in contrib:
                     c = contrib[n] if c is None else c + contrib[n]
                 out_cots[n] = c
-            out = {"cots": out_cots, "grads": grads}
+            # the per-stage grad stream rides a same-node private key: only
+            # acc{s} (same worker) reads it, so it never crosses to b{s-1}
+            out = {"cots": out_cots, _GRADS_KEY: grads}
             if stage.index == loss_stage:
-                out["loss"] = f_payload[loss_name]
+                # reduce to a scalar HERE, on the stage's own mesh: summing
+                # driver-side would re-partition the reduction after the
+                # tensor crossed a process boundary as a gathered numpy
+                # array, changing the f32 rounding vs the threaded path
+                out["loss"] = jnp.sum(f_payload[loss_name])
             return out
         return run_bwd
 
     def make_acc_fn():
         # per-microbatch gradients accumulate in fp32 (the optimizer kernels'
-        # math dtype) no matter what dtype the backward emits (e.g. bf16)
+        # math dtype) no matter what dtype the backward emits (e.g. bf16);
+        # the accumulator is epoch-local state, reset by on_epoch
         state: Dict[str, Any] = {}
         meta = {"fires": 0}
 
+        def on_epoch(_):
+            state.clear()
+            meta["fires"] = 0
+
         def run_acc(b_payload):
             meta["fires"] += 1
-            for n, g in b_payload["grads"].items():
+            for n, g in b_payload[_GRADS_KEY].items():
                 g32 = g.astype(jnp.float32)
                 state[n] = state[n] + g32 if n in state else g32
-            out = {"grads": dict(state)}
+            out = {_GRADS_KEY: dict(state)}
             if clip and meta["fires"] == num_microbatches:
                 # the stage-local P contribution to the global grad norm
                 out["sqnorms"] = sqnorm_partials(state)
             return out
-        return run_acc
+        return run_acc, on_epoch
 
-    def make_opt_fn(stage, bound):
+    def make_opt_fn(stage, bound, state_cell):
         pnames = stage.param_names
+        meta = {"step": 0}
+
+        def on_epoch(v):
+            if v is not None:
+                meta["step"] = int(v)
 
         def run_opt(acc_payload, *rest):
             idx = 0
@@ -580,36 +749,38 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
             if opt.stateful:
                 state = rest[idx]["state"]
                 idx += 1
-            grads = acc_payload["grads"]
+            grads = acc_payload[_GRADS_KEY]
             if norm_payload is not None:
                 grads = {n: scale_grad(grads[n], norm_payload["scale"])
                          for n in pnames}
             else:
                 grads = {n: grads[n] for n in pnames}
-            new_params, new_state = opt.update(
-                {n: bound[n] for n in pnames}, grads, state, lr_now)
+            params = {n: bound[n] for n in pnames}
+            if opt.stateful and state is None:
+                # first step in this worker: fresh (zeroed) state — the
+                # same values the driver-side mirror starts from
+                state = opt.init_state(params)
+            lr_now = opt.lr_at(meta["step"])
+            meta["step"] += 1
+            new_params, new_state = opt.update(params, grads, state, lr_now)
             new_params = jax.block_until_ready(new_params)
+            # the stage's persistent state advances IN the worker: the next
+            # epoch's forward reads the updated bound params, state{s} emits
+            # the updated optimizer state
+            bound.update(new_params)
+            if opt.stateful:
+                state_cell["state"] = new_state
             out = {"params": new_params, "grads": grads}
             if opt.stateful:
                 out["state"] = new_state
             if norm_payload is not None:
                 out["norm"] = norm_payload["norm"]
             return out
-        return run_opt
+        return run_opt, on_epoch
 
-    collect = []
+    collect = _train_collect_names(tstaged)
     for s, stage in enumerate(tstaged.stages):
-        stage_param_set = set(stage.param_names)
-        bound_raw = {n: inputs[n] for n in stage.input_names
-                     if n in graph_inputs and n not in mb_names}
-        if placed_params is not None and s in placed_params:
-            rest = {n: v for n, v in bound_raw.items()
-                    if n not in stage_param_set}
-            rest_placed, shard_of = _bind_placed(stage, rest)
-            bound = {**rest_placed, **placed_params[s]}
-        else:
-            bound, shard_of = _bind_placed(stage, bound_raw)
-        fwd_fn = make_fwd_fn(stage, bound, shard_of)
+        fwd_fn, bound, fwd_on_epoch = make_fwd_fn(stage)
         bwd_fn = make_bwd_fn(stage)
         if fn_wrap is not None:
             fwd_fn = fn_wrap("fwd", s, fwd_fn)
@@ -617,36 +788,39 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
         specs.append(ActorSpec(
             name=f"f{s}", fn=fwd_fn,
             inputs=("data",) if s == 0 else (f"f{s-1}",),
-            out_regs=regs[s], node=0, thread=s + 1,
-            max_fires=num_microbatches))
+            out_regs=regs[s], node=s + 1, thread=0,
+            max_fires=num_microbatches, on_epoch=fwd_on_epoch))
         specs.append(ActorSpec(
             name=f"b{s}", fn=bwd_fn,
             inputs=(f"f{s}",) if s == S - 1 else (f"f{s}", f"b{s+1}"),
-            out_regs=2, node=0, thread=s + 1,
+            out_regs=2, node=s + 1, thread=0,
             max_fires=num_microbatches))
         if stage.param_names:
+            acc_fn, acc_on_epoch = make_acc_fn()
             specs.append(ActorSpec(
-                name=f"acc{s}", fn=make_acc_fn(), inputs=(f"b{s}",),
-                out_regs=1, node=0, thread=s + 1,
-                max_fires=num_microbatches, emit_every=num_microbatches))
+                name=f"acc{s}", fn=acc_fn, inputs=(f"b{s}",),
+                out_regs=1, node=s + 1, thread=0,
+                max_fires=num_microbatches, emit_every=num_microbatches,
+                on_epoch=acc_on_epoch))
             opt_inputs = (f"acc{s}",)
             if clip:
                 opt_inputs += ("norm",)
+            state_cell: Dict[str, Any] = {"state": None}
             if opt.stateful:
                 # the optimizer-state register stream: a source actor emits
-                # the current AdamWState; opt{s} consumes it next to the
-                # summed gradients and the broadcast clip scale
-                state_payload = {"state": opt_states[s]}
+                # the worker-resident AdamWState; opt{s} consumes it next to
+                # the summed gradients and the broadcast clip scale
                 specs.append(ActorSpec(
-                    name=f"state{s}", fn=lambda _sp=state_payload: _sp,
-                    inputs=(), out_regs=1, node=0, thread=s + 1,
+                    name=f"state{s}",
+                    fn=lambda _c=state_cell: {"state": _c["state"]},
+                    inputs=(), out_regs=1, node=s + 1, thread=0,
                     max_fires=1))
                 opt_inputs += (f"state{s}",)
+            opt_fn, opt_on_epoch = make_opt_fn(stage, bound, state_cell)
             specs.append(ActorSpec(
-                name=f"opt{s}", fn=make_opt_fn(stage, bound),
-                inputs=opt_inputs, out_regs=1, node=0, thread=s + 1,
-                max_fires=1))
-            collect.append(f"opt{s}")
+                name=f"opt{s}", fn=opt_fn,
+                inputs=opt_inputs, out_regs=1, node=s + 1, thread=0,
+                max_fires=1, on_epoch=opt_on_epoch))
 
     if clip and param_stages:
         # cross-stage *sideways* communication on the actor protocol: sum the
@@ -664,56 +838,76 @@ def train_stage_actor_specs(tstaged, inputs: Dict[str, Any],
             inputs=tuple(f"acc{s}" for s in param_stages),
             out_regs=1, node=0, thread=0, max_fires=1))
 
-    collect.insert(0, f"b{loss_stage}")
     return specs, collect
+
+
+class TrainSpecBuilder(_SpecBuilderBase):
+    """Picklable builder of the fwd/bwd/opt training actor graph."""
+
+    def __init__(self, microbatch_inputs: Sequence[str],
+                 num_microbatches: int, lr: float = 1e-2, regs=None,
+                 fn_wrap=None, optimizer=None, staged=None, recipe=None):
+        super().__init__(staged=staged, recipe=recipe)
+        self.microbatch_inputs = list(microbatch_inputs)
+        self.num_microbatches = num_microbatches
+        self.lr = lr
+        self.regs = None if regs is None else list(regs)
+        self.fn_wrap = fn_wrap
+        self.optimizer = optimizer
+
+    def __call__(self):
+        return train_stage_actor_specs(self.staged, self.microbatch_inputs,
+                                       self.num_microbatches, lr=self.lr,
+                                       regs=self.regs, fn_wrap=self.fn_wrap,
+                                       optimizer=self.optimizer)
 
 
 class TrainPipelineExecutor(_StagedExecutorBase):
     """Run a :class:`TrainStagedProgram` as a 1F1B training pipeline.
 
-    Holds the current params *and the optimizer state*; each :meth:`step`
-    builds a fresh fwd/bwd/opt actor graph (actors are single-use state
-    machines), streams the microbatches through it, and applies the
-    optimizer update — returning ``(loss, grads, params)`` bit-identical to
-    the monolithic reference (:func:`repro.train.steps.make_graph_train_step`
-    with the same :class:`repro.core.lowering.OptimizerSpec`; the objective
-    is the *sum* of the loss tensor over the batch, ``grads`` are post-clip
-    when global-norm clipping is on).
+    The fwd/bwd/opt actor graph is built once; each :meth:`step` is one
+    epoch over it. Per-stage persistent state — placed params, the AdamW
+    state, the fp32 gradient accumulator — lives in the stage's actor
+    closures, resident in whichever worker owns the stage (its OS thread
+    under ``runtime="threads"``, its worker process under
+    ``runtime="processes"``): the opt actor updates the stage's bound
+    params and optimizer state in place, so nothing round-trips through the
+    driver between steps. The driver keeps a mirror (``params``,
+    ``opt_states``) refreshed from the opt actors' collected outputs, and
+    returns ``(loss, grads, params)`` bit-identical to the monolithic
+    reference (:func:`repro.train.steps.make_graph_train_step` with the
+    same :class:`repro.core.lowering.OptimizerSpec`; the objective is the
+    *sum* of the loss tensor over the batch, ``grads`` are post-clip when
+    global-norm clipping is on).
 
-    Optimizer statefulness (the tentpole of PR 3): per-stage
-    :class:`repro.optim.adamw.AdamWState` lives in ``opt_states`` between
-    steps and re-enters each step's actor graph through a ``state{s}`` source
-    actor — a second register stream next to the weights. Stage params are
-    placed on their stage mesh once at construction and re-bound from the
-    optimizer actors' outputs (already on-mesh) instead of being transferred
-    from the host every step. ``opt_state`` merges the per-stage states;
-    ``last_grad_norm`` is the global gradient norm the ``norm`` actor
-    computed (None when clipping is off).
-
-    Instrumentation mirrors :class:`ActorPipelineExecutor`:
+    ``opt_state`` merges the per-stage states; ``last_grad_norm`` is the
+    global gradient norm the ``norm`` actor computed (None when clipping is
+    off). Instrumentation mirrors :class:`ActorPipelineExecutor`:
     ``last_makespan`` (wall-clock seconds), ``last_history`` (per-actor
     action intervals), ``last_peak_regs`` (per-actor peak out-registers in
     use — ``f{s}`` entries are the in-flight activation counts the 1F1B
-    quota bounds).
+    quota bounds), ``last_edge_bytes`` (per-edge payload traffic).
     """
 
     def __init__(self, tstaged, params: Dict[str, Any],
                  microbatch_inputs: Sequence[str], num_microbatches: int,
                  lr: float = 1e-2, regs: Optional[Sequence[int]] = None,
-                 fn_wrap: Optional[Callable] = None, optimizer=None):
+                 fn_wrap: Optional[Callable] = None, optimizer=None,
+                 runtime: str = "threads", recipe=None):
         from repro.core.lowering import OptimizerSpec
 
         super().__init__(tstaged, microbatch_inputs, num_microbatches, regs,
-                         fn_wrap)
+                         fn_wrap, runtime=runtime, recipe=recipe)
         self.tstaged = tstaged
         self.lr = lr
         self.optimizer = optimizer if optimizer is not None else (
             tstaged.optimizer if tstaged.optimizer is not None
             else OptimizerSpec.sgd(lr))
         self.params: Dict[str, Any] = {}
-        self._placed_params: Dict[int, Dict[str, Any]] = {}
         self.load_params(params)
-        # persistent per-stage optimizer state (None entries for SGD)
+        # driver-side mirror of the per-stage optimizer state (None entries
+        # for SGD); the workers initialize their own identical (zeroed) copy
+        # on the first step and send each update back on the opt payload
         self.opt_states: Dict[int, Any] = {
             st.index: self.optimizer.init_state(
                 {n: self.params[n] for n in st.param_names})
@@ -721,30 +915,27 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         self.step_count = 0
         self.last_grad_norm = None
 
+    def _make_builder(self):
+        return TrainSpecBuilder(self.microbatch_inputs, self.num_microbatches,
+                                lr=self.lr, regs=self.regs,
+                                fn_wrap=self.fn_wrap,
+                                optimizer=self.optimizer,
+                                staged=self.tstaged, recipe=self.recipe)
+
     def load_params(self, params: Dict[str, Any]) -> None:
         """Replace the executor-owned params (e.g. a checkpoint restore).
 
-        Binds each stage's params onto its mesh once; the opt actors return
-        updated values already placed, so steps never re-transfer weights.
-        Optimizer state is untouched — reset ``opt_states`` separately if the
-        new params are unrelated to the old trajectory.
+        The new values ride the next step's ``ctx`` into each stage's
+        worker, which places them on its mesh; afterwards the opt actors
+        keep them device-resident. Optimizer state is untouched — reset
+        ``opt_states`` separately if the new params are unrelated to the
+        old trajectory.
         """
-        import jax
-
         missing = [n for n in self.tstaged.param_names if n not in params]
         if missing:
             raise ValueError(f"missing params: {missing}")
         self.params = {n: params[n] for n in self.tstaged.param_names}
-        self._placed_params = {}
-        for st in self.tstaged.stages:
-            if not st.param_names:
-                continue
-            vals = {n: self.params[n] for n in st.param_names}
-            if st.in_shardings is not None:
-                shard_of = dict(zip(st.input_names, st.in_shardings))
-                vals = {n: jax.device_put(v, shard_of[n])
-                        for n, v in vals.items()}
-            self._placed_params[st.index] = vals
+        self._params_dirty = True
 
     @property
     def peak_inflight_activations(self) -> int:
@@ -780,22 +971,32 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         """
         import jax.numpy as jnp
 
+        from repro.core.lowering import split_microbatches
+
         check_run_inputs(
             data_inputs,
             [n for n in self.tstaged.input_names if n not in self.params],
             owned=self.tstaged.param_names)
-        inputs = dict(data_inputs)
-        inputs.update(self.params)
-        specs, collect = train_stage_actor_specs(
-            self.tstaged, inputs, self.microbatch_inputs,
-            self.num_microbatches, lr=self.lr, regs=self.regs,
-            fn_wrap=self.fn_wrap, optimizer=self.optimizer,
-            opt_states=self.opt_states, step_index=self.step_count,
-            placed_params=self._placed_params)
-        outs = self._execute(specs, collect, timeout)
+        graph_inputs = set(self.tstaged.input_names)
+        mb = set(self.microbatch_inputs)
+        ctx: Dict[str, Any] = {
+            "data": split_microbatches(data_inputs, self.microbatch_inputs,
+                                       self.num_microbatches)}
+        for st in self.tstaged.stages:
+            bound = {n: data_inputs[n] for n in st.input_names
+                     if n in graph_inputs and n not in mb
+                     and n not in self.params}
+            if self._params_dirty:
+                bound.update({n: self.params[n] for n in st.param_names})
+            ctx[f"f{st.index}"] = bound
+            if st.param_names:
+                ctx[f"opt{st.index}"] = self.step_count
+        outs = self._run_rt(ctx, None, timeout)
+        self._params_dirty = False
 
-        # the loss-bearing backward actor fires in version order on one
-        # thread, so the collected loss stream is microbatch-ordered
+        collect = _train_collect_names(self.tstaged)
+        # the loss-bearing backward actor fires in version order in one
+        # worker, so the collected loss stream is microbatch-ordered
         loss_payloads = outs[collect[0]]
         if len(loss_payloads) != self.num_microbatches:
             raise RuntimeError(
@@ -813,7 +1014,6 @@ class TrainPipelineExecutor(_StagedExecutorBase):
             s = int(name[len("opt"):])
             grads.update(opt_out["grads"])
             self.params.update(opt_out["params"])
-            self._placed_params[s].update(opt_out["params"])
             if "state" in opt_out:
                 self.opt_states[s] = opt_out["state"]
             if "norm" in opt_out:
@@ -831,11 +1031,12 @@ class TrainPipelineExecutor(_StagedExecutorBase):
 # through the stage chain: a DecodeWork advances every slot of the group by
 # one token, a PrefillWork runs one freshly admitted request's prompt and
 # scatters its caches into the group cache. The stage's KV/SSM caches never
-# ride the payload — they are persistent stage-local state (the same pattern
-# as the AdamW state stream in training), so the only tensors crossing stages
-# are the (B, 1, d) hidden and the final logits. Overlap across groups
-# emerges from the stage out-register quotas alone (§4.3): while stage 1
-# decodes group 0, stage 0 already decodes group 1.
+# ride the payload — they are persistent stage-local state in the stage
+# actor's closure (the same pattern as the AdamW state stream in training),
+# resident in whichever worker owns the stage, so the only tensors crossing
+# stages are the (B, 1, d) hidden and the final logits. Overlap across
+# groups emerges from the stage out-register quotas alone (§4.3): while
+# stage 1 decodes group 0, stage 0 already decodes group 1.
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -885,11 +1086,9 @@ def serve_stage_apply(stage, caches: Dict[int, Any], work, xin):
 
 
 class _ServeEngineBase:
-    """Shared state of the two serving engines: per-stage, per-group
+    """Shared state of the inline serving engine: per-stage, per-group
     persistent caches (``caches[s][g]``, the register stream that outlives
-    every round) and round instrumentation. Keeping this in one place means
-    the actor executor and the inline monolithic reference cannot drift in
-    how they allocate or account for cache state."""
+    every round) and round instrumentation."""
 
     def _init_serve_state(self, sstaged) -> None:
         self.sstaged = sstaged
@@ -936,44 +1135,110 @@ class InlineServeEngine(_ServeEngineBase):
         return results
 
 
-class ServePipelineExecutor(_StagedExecutorBase, _ServeEngineBase):
+def serve_stage_actor_specs(sstaged, regs: Optional[Sequence[int]] = None,
+                            fn_wrap: Optional[Callable] = None,
+                            ) -> Tuple[List[ActorSpec], str]:
+    """Build the persistent serve actor graph: an ``admit`` source emitting
+    the round's work items (delivered via ``ctx["admit"]``, with ``fires``
+    set to the round's work count) and one ``stage{s}`` actor per model
+    shard at node ``s + 1``, each owning its per-group KV/SSM caches as
+    closure state — allocated lazily the first time a group reaches the
+    stage, resident in the owning worker across rounds.
+
+    Returns ``(specs, final_stage_name)``."""
+    S = sstaged.num_stages
+    if regs is None:
+        regs = [max(1, S - s) for s in range(S)]
+    regs = _validate_regs(regs, S)
+
+    cell: Dict[str, Any] = {"work": []}
+
+    def on_epoch(v):
+        if v is not None:
+            cell["work"] = list(v)
+
+    specs: List[ActorSpec] = [ActorSpec(
+        name="admit", fn=lambda version: {"work": cell["work"][version]},
+        inputs=(), out_regs=2, node=0, thread=0, max_fires=0,
+        wants_version=True, on_epoch=on_epoch)]
+
+    def make_stage_fn(stage):
+        caches: Dict[int, Any] = {}
+
+        def run_stage(payload):
+            import jax.numpy as jnp
+
+            work = payload["work"]
+            if work.group not in caches:
+                tok = jnp.zeros((sstaged.group_size,), jnp.int32)
+                caches[work.group] = stage.init_caches(tok)
+            xin = payload.get("x")
+            if xin is None:                       # first stage: token ids in
+                xin = (work.tokens if isinstance(work, PrefillWork)
+                       else work.tok)
+            xout = serve_stage_apply(stage, caches, work, xin)
+            if stage.last:
+                return {"work": work, "logits": xout}
+            return {"work": work, "x": xout}
+        return run_stage
+
+    for s, stage in enumerate(sstaged.stages):
+        fn = make_stage_fn(stage)
+        if fn_wrap is not None:
+            fn = fn_wrap(s, fn)
+        specs.append(ActorSpec(
+            name=f"stage{s}", fn=fn,
+            inputs=("admit",) if s == 0 else (f"stage{s-1}",),
+            out_regs=regs[s], node=s + 1, thread=0, max_fires=0))
+    return specs, f"stage{S - 1}"
+
+
+class ServeSpecBuilder(_SpecBuilderBase):
+    """Picklable builder of the continuous-batching serve actor graph."""
+
+    def __init__(self, regs=None, fn_wrap=None, staged=None, recipe=None):
+        super().__init__(staged=staged, recipe=recipe)
+        self.regs = None if regs is None else list(regs)
+        self.fn_wrap = fn_wrap
+
+    def __call__(self):
+        return serve_stage_actor_specs(self.staged, regs=self.regs,
+                                       fn_wrap=self.fn_wrap)
+
+
+class ServePipelineExecutor(_StagedExecutorBase):
     """Run a :class:`repro.core.lowering.ServeStagedProgram` as a pipelined
     continuous-batching decode engine.
 
-    Holds per-stage, per-group caches across rounds (``caches[s][g]``) —
-    the persistent register stream. Each :meth:`run_round` builds a fresh
-    actor graph (actors are single-use state machines): an ``admit`` source
-    actor emits the round's work items in order, one ``stage{s}`` actor per
-    model shard consumes them FIFO, and the last stage's logits are
+    The actor graph persists across rounds; per-stage, per-group caches are
+    closure state inside each ``stage{s}`` actor, resident in the worker
+    that owns the stage (under ``runtime="processes"``, a real process —
+    the caches never cross a process boundary). Each :meth:`run_round` is
+    one epoch: the round's work items travel in ``ctx``, the per-actor fire
+    bound is the round's work count, and the last stage's logits are
     collected in emission order. ``regs[s]`` is stage s's out-register
     quota (default ``max(1, S - s)``, the forward-pipeline schedule);
     quota back-pressure alone bounds how many groups are in flight.
 
     Instrumentation mirrors the other executors (``last_makespan``,
-    ``last_history``, ``last_peak_regs``) plus ``rounds`` and
-    ``total_makespan`` accumulated over the session.
+    ``last_history``, ``last_peak_regs``, ``last_edge_bytes``) plus
+    ``rounds`` and ``total_makespan`` accumulated over the session.
     """
 
     def __init__(self, sstaged, regs: Optional[Sequence[int]] = None,
-                 fn_wrap: Optional[Callable] = None):
-        super().__init__(sstaged, [], 1, regs, fn_wrap)
+                 fn_wrap: Optional[Callable] = None,
+                 runtime: str = "threads", recipe=None):
+        super().__init__(sstaged, [], 1, regs, fn_wrap,
+                         runtime=runtime, recipe=recipe)
         if self.regs is not None:
             self.regs = _validate_regs(self.regs, sstaged.num_stages)
-        self._init_serve_state(sstaged)
+        self.sstaged = sstaged
+        self.rounds = 0
+        self.total_makespan = 0.0
 
-    def _make_stage_fn(self, stage):
-        def run_stage(payload):
-            work = payload["work"]
-            xin = payload.get("x")
-            if xin is None:                       # first stage: token ids in
-                xin = (work.tokens if isinstance(work, PrefillWork)
-                       else work.tok)
-            xout = serve_stage_apply(stage, self.caches[stage.index],
-                                     work, xin)
-            if stage.last:
-                return {"work": work, "logits": xout}
-            return {"work": work, "x": xout}
-        return run_stage
+    def _make_builder(self):
+        return ServeSpecBuilder(regs=self.regs, fn_wrap=self.fn_wrap,
+                                staged=self.sstaged, recipe=self.recipe)
 
     def run_round(self, work: Sequence, timeout: float = 300.0) -> List:
         """Stream ``work`` (PrefillWork/DecodeWork items) through the stage
@@ -982,30 +1247,15 @@ class ServePipelineExecutor(_StagedExecutorBase, _ServeEngineBase):
         if not work:
             return []
         work = list(work)
-        for w in work:
-            self.ensure_group(w.group)
+        n = len(work)
         S = self.sstaged.num_stages
-        regs = self.regs if self.regs is not None else \
-            [max(1, S - s) for s in range(S)]
-        regs = _validate_regs(regs, S)
-
-        specs: List[ActorSpec] = [ActorSpec(
-            name="admit", fn=lambda version: {"work": work[version]},
-            inputs=(), out_regs=2, node=0, thread=0,
-            max_fires=len(work), wants_version=True)]
-        for s, stage in enumerate(self.sstaged.stages):
-            fn = self._make_stage_fn(stage)
-            if self.fn_wrap is not None:
-                fn = self.fn_wrap(s, fn)
-            specs.append(ActorSpec(
-                name=f"stage{s}", fn=fn,
-                inputs=("admit",) if s == 0 else (f"stage{s-1}",),
-                out_regs=regs[s], node=0, thread=s + 1,
-                max_fires=len(work)))
-        outs = self._execute(specs, f"stage{S - 1}", timeout)
-        if len(outs) != len(work):
+        fires = {"admit": n}
+        fires.update({f"stage{s}": n for s in range(S)})
+        outs = self._run_rt({"admit": work}, fires, timeout)
+        if len(outs) != n:
             raise RuntimeError(f"collected {len(outs)} round results, "
-                               f"expected {len(work)}")
-        self._count_round()
-        # the final stage fires in FIFO submission order on one thread
+                               f"expected {n}")
+        self.rounds += 1
+        self.total_makespan += self.last_makespan
+        # the final stage fires in FIFO submission order in one worker
         return [o["logits"] for o in outs]

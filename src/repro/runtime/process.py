@@ -1,0 +1,417 @@
+"""Process-backed actor runtime — one worker process per node id (paper §5).
+
+The 64-bit actor address (:mod:`repro.runtime.messages`) encodes a *node*
+field; here it stops being notation: :class:`ProcessRuntime` spawns one
+worker process per distinct node id in the spec graph, each running a
+:class:`repro.runtime.threaded._LocalEngine` over its own (node, thread)
+keys. Same-node reqs keep their zero-copy in-process ``payload``; a req
+crossing nodes has its payload serialized as host arrays
+(:func:`repro.runtime.base.encode_payload`) and travels a real transport
+(multiprocessing queues). The actor protocol itself is byte-for-byte the one
+the threaded runtime speaks — workers coordinate purely by req/ack, with no
+central scheduler (§5's "no middleman" claim).
+
+Spec graphs are shipped as a *picklable builder* (called once in the parent
+for metadata, once in each worker), so closures holding jax arrays or
+traced functions never cross the process boundary — each worker lowers and
+jit-compiles only the stages that actually fire on its node.
+
+Distributed termination detection: each worker reports local quiescence
+*transitions* (``pending == 0 and live == 0``, see the counter discipline in
+:mod:`repro.runtime.threaded`) on its FIFO channel to the driver. The driver
+concludes an epoch when every node's latest report is quiescent and every
+collected actor delivered its expected output count. This is sound because a
+req in flight to node B implies its sender still holds a live (unacked)
+register, so the *sender's* latest report is non-quiescent — the driver can
+never conclude while protocol messages are outstanding.
+
+Epoch hygiene: every protocol message is epoch-tagged. Workers buffer
+messages that race ahead of the driver's epoch broadcast and drop stale
+ones, so a timed-out epoch cannot poison the next.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import pickle
+import queue
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.runtime.base import (RemoteTraceback, Runtime, SpecBuilder,
+                                WorkerError, _check_epoch_names, _encode,
+                                encode_payload)
+from repro.runtime.messages import Req, node_of
+
+
+def _worker_main(node: int, builder, collect_names, inbox, driver_q,
+                 peer_queues) -> None:
+    """Entry point of one node's worker process (module-level: spawn pickles
+    the function by reference)."""
+    state = {"epoch": 0, "sent": 0, "recv": 0}
+    try:
+        import threading
+
+        from repro.launch.xla_env import apply_worker_env
+        apply_worker_env(node)
+        from repro.runtime.threaded import _LocalEngine
+
+        specs, _ = builder()
+        local_keys = sorted({(s.node, s.thread) for s in specs
+                             if s.node == node})
+        engine = _LocalEngine(specs, local_keys=local_keys)
+        engine.collect_names = set(collect_names)
+        sent_lock = threading.Lock()
+
+        def send_remote(msg):
+            if isinstance(msg, Req):
+                msg = dataclasses.replace(
+                    msg, payload=encode_payload(msg.payload))
+            # count BEFORE the message can possibly be received: the probe
+            # sums (see ProcessRuntime) rely on sent >= recv at all times
+            with sent_lock:
+                state["sent"] += 1
+            peer_queues[node_of(msg.dst)].put(("msg", state["epoch"], msg))
+
+        def on_output(name, value, version):
+            driver_q.put(("out", state["epoch"], node, name,
+                          encode_payload(value), version))
+
+        def on_quiescence(flag):
+            driver_q.put(("q", state["epoch"], node, flag))
+
+        def on_error(exc, key):
+            driver_q.put(("error", state["epoch"], node,
+                          type(exc).__name__, str(exc),
+                          "".join(traceback.format_exception(exc))))
+
+        engine.send_remote = send_remote
+        engine.on_output = on_output
+        engine.on_quiescence = on_quiescence
+        engine.on_error = on_error
+        driver_q.put(("ready", node))
+
+        held: List[Tuple[int, Any]] = []  # msgs that raced the epoch bcast
+        while True:
+            item = inbox.get()
+            kind = item[0]
+            if kind == "stop":
+                engine.stop_workers()
+                return
+            if kind == "epoch":
+                _, e, ctx, fires = item
+                engine.stop_workers()
+                engine.join_workers(1.0)
+                state["epoch"] = e
+                with sent_lock:
+                    state["sent"] = 0
+                state["recv"] = 0
+                engine.start_epoch(ctx, fires)
+                replay = [m for ee, m in held if ee == e]
+                held = [(ee, m) for ee, m in held if ee > e]
+                for m in replay:
+                    state["recv"] += 1
+                    engine.post(m)
+            elif kind == "msg":
+                _, e, m = item
+                if e == state["epoch"]:
+                    state["recv"] += 1
+                    engine.post(m)
+                elif e > state["epoch"]:
+                    held.append((e, m))
+                # e < epoch: stale message from an abandoned epoch — drop
+            elif kind == "probe":
+                _, e, k = item
+                if e == state["epoch"]:
+                    with sent_lock:
+                        s = state["sent"]
+                    driver_q.put(("probe_ack", e, k, node,
+                                  engine.quiescent, s, state["recv"]))
+            elif kind == "stats":
+                _, e = item
+                if e == state["epoch"]:
+                    engine.stop_workers()
+                    engine.join_workers(1.0)
+                    driver_q.put(("stats", e, node, engine.snapshot()))
+                else:
+                    driver_q.put(("stats", e, node, ({}, {}, {}, {})))
+    except BaseException as exc:  # noqa: BLE001 — ship everything to driver
+        try:
+            driver_q.put(("error", state["epoch"], node,
+                          type(exc).__name__, str(exc),
+                          "".join(traceback.format_exception(exc))))
+        except Exception:
+            pass
+
+
+class ProcessRuntime(Runtime):
+    """Drive an actor graph across one worker process per node id.
+
+    ``builder`` is a picklable callable returning ``(specs,
+    collect_outputs_of)``; ``collect_outputs_of`` here overrides the
+    builder's choice. Workers are spawned once in ``__init__`` and reused
+    across :meth:`run` epochs; :meth:`close` (or context-manager exit)
+    tears them down.
+    """
+
+    def __init__(self, builder: SpecBuilder, collect_outputs_of=None,
+                 start_timeout: float = 180.0):
+        try:
+            pickle.dumps(builder)
+        except Exception as exc:
+            raise ValueError(
+                "runtime='processes' requires a picklable spec builder (it "
+                "is shipped to one worker process per node); pickling "
+                f"failed with: {exc!r}") from exc
+        specs, default_collect = builder()
+        collect = (default_collect if collect_outputs_of is None
+                   else collect_outputs_of)
+        self._collect_single = collect is None or isinstance(collect, str)
+        names = [collect] if self._collect_single else list(collect)
+        self._collect_names = [n for n in names if n is not None]
+        self._specs = list(specs)
+        self._spec_by_name = {s.name: s for s in self._specs}
+        for n in self._collect_names:
+            if n not in self._spec_by_name:
+                raise ValueError(f"collect_outputs_of names unknown actor {n!r}")
+        self.nodes = sorted({s.node for s in self._specs})
+        ctx = mp.get_context("spawn")
+        self._driver_q = ctx.Queue()
+        self._node_qs = {n: ctx.Queue() for n in self.nodes}
+        self._procs: Dict[int, mp.Process] = {}
+        self._epoch = 0
+        self._closed = False
+        self.last_history: Dict[str, List[Tuple[float, float]]] = {}
+        self.last_peak_regs: Dict[str, int] = {}
+        self.last_edge_bytes: Dict[Tuple[str, str], int] = {}
+        self.last_fired: Dict[str, int] = {}
+        from repro.launch.xla_env import worker_env
+        for n in self.nodes:
+            p = ctx.Process(
+                target=_worker_main,
+                args=(n, builder, tuple(self._collect_names),
+                      self._node_qs[n], self._driver_q, self._node_qs),
+                daemon=True)
+            # spawn snapshots os.environ at start(): inject the per-worker
+            # XLA setup here, before the child's first (jax) import
+            overrides = worker_env(n)
+            saved = {k: os.environ.get(k) for k in overrides}
+            os.environ.update(overrides)
+            try:
+                p.start()
+            finally:
+                for k, v in saved.items():
+                    if v is None:
+                        os.environ.pop(k, None)
+                    else:
+                        os.environ[k] = v
+            self._procs[n] = p
+        self._await_ready(start_timeout)
+
+    # -- startup -----------------------------------------------------------------
+    def _await_ready(self, timeout: float) -> None:
+        ready = set()
+        deadline = time.monotonic() + timeout
+        while len(ready) < len(self.nodes):
+            try:
+                item = self._driver_q.get(timeout=0.2)
+            except queue.Empty:
+                self._check_alive()
+                if time.monotonic() > deadline:
+                    self.close()
+                    raise TimeoutError(
+                        "process runtime workers failed to start; missing "
+                        f"nodes: {sorted(set(self.nodes) - ready)}")
+                continue
+            if item[0] == "ready":
+                ready.add(item[1])
+            elif item[0] == "error":
+                self._raise_worker_error(item)
+
+    # -- epoch execution ---------------------------------------------------------
+    def run(self, ctx: Optional[Dict[str, Any]] = None,
+            fires: Optional[Dict[str, int]] = None,
+            timeout: float = 120.0):
+        if self._closed:
+            raise RuntimeError("process runtime is closed")
+        _check_epoch_names(self._specs, ctx, fires)
+        ctx = ctx or {}
+        fires = fires or {}
+        effective = {s.name: fires.get(s.name, s.max_fires)
+                     for s in self._specs}
+        if not any(v is not None for v in effective.values()):
+            raise ValueError("process runtime needs at least one bounded actor")
+        self._epoch += 1
+        e = self._epoch
+        node_of_name = {s.name: s.node for s in self._specs}
+        for n in self.nodes:
+            ctx_n = {k: _encode(v) for k, v in ctx.items()
+                     if node_of_name[k] == n}
+            fires_n = {k: v for k, v in fires.items()
+                       if node_of_name[k] == n}
+            self._node_qs[n].put(("epoch", e, ctx_n, fires_n))
+        outputs: Dict[str, List[Any]] = {n: [] for n in self._collect_names}
+        qstate: Dict[int, bool] = {}
+        stats: Dict[int, Any] = {}
+        deadline = time.monotonic() + timeout
+        # Termination detection (Mattern four-counter / double-wave method):
+        # quiescence-transition reports are only a cheap *trigger*. When the
+        # latest report from every node is quiescent, the driver probes all
+        # workers; each replies with its current (quiescent, sent, recv)
+        # transport counters. The epoch concludes after TWO consecutive
+        # probe waves that are all-quiescent with equal and unchanged
+        # sum(sent) == sum(recv) — monotone counters make that condition
+        # sticky-correct even though per-node replies are not simultaneous.
+        # Once concluded, per-process FIFO ordering of the driver queue
+        # guarantees every collected output has already been delivered
+        # (outputs are enqueued before the fire's counter bump, hence
+        # before any later probe reply of that worker).
+        probe_k = 0
+        awaiting: Optional[int] = None
+        acks: Dict[int, Tuple[bool, int, int]] = {}
+        prev_sums: Optional[Tuple[int, int]] = None
+        done = False
+        while not done:
+            if (awaiting is None and len(qstate) == len(self.nodes)
+                    and all(qstate.values())):
+                probe_k += 1
+                awaiting = probe_k
+                acks = {}
+                for n in self.nodes:
+                    self._node_qs[n].put(("probe", e, probe_k))
+            item = self._poll(e, outputs, qstate, stats, deadline, effective)
+            if item is None or item[0] != "probe_ack":
+                continue
+            _, ee, k, node, quiescent, sent, recv = item
+            if ee != e or k != awaiting:
+                continue  # stale probe reply
+            acks[node] = (quiescent, sent, recv)
+            if len(acks) < len(self.nodes):
+                continue
+            awaiting = None
+            if all(a[0] for a in acks.values()):
+                s_sum = sum(a[1] for a in acks.values())
+                r_sum = sum(a[2] for a in acks.values())
+                if s_sum == r_sum and prev_sums == (s_sum, r_sum):
+                    done = True
+                else:
+                    prev_sums = (s_sum, r_sum) if s_sum == r_sum else None
+            else:
+                prev_sums = None
+        for n in self.nodes:
+            self._node_qs[n].put(("stats", e))
+        while len(stats) < len(self.nodes):
+            self._poll(e, outputs, qstate, stats, deadline, effective)
+        hist: Dict[str, Any] = {}
+        peaks: Dict[str, int] = {}
+        edges: Dict[Tuple[str, str], int] = {}
+        fired: Dict[str, int] = {}
+        for _, (h, p, ed, f) in sorted(stats.items()):
+            hist.update(h)
+            peaks.update(p)
+            edges.update(ed)
+            fired.update(f)
+        self.last_history, self.last_peak_regs = hist, peaks
+        self.last_edge_bytes, self.last_fired = edges, fired
+        if self._collect_single:
+            return outputs[self._collect_names[0]] if self._collect_names else []
+        return outputs
+
+    def _poll(self, e, outputs, qstate, stats, deadline, effective):
+        """Handle one driver-queue item; returns it for kinds the caller
+        dispatches on itself (probe_ack), None on an empty slice."""
+        try:
+            item = self._driver_q.get(timeout=0.2)
+        except queue.Empty:
+            self._check_alive()
+            if time.monotonic() > deadline:
+                self._raise_timeout(e, effective)
+            return None
+        kind = item[0]
+        if kind == "q":
+            _, ee, node, flag = item
+            if ee == e:
+                qstate[node] = flag
+        elif kind == "out":
+            _, ee, node, name, value, version = item
+            if ee == e:
+                outputs[name].append(value)
+        elif kind == "stats":
+            _, ee, node, snap = item
+            if ee == e:
+                stats[node] = snap
+        elif kind == "error":
+            self._raise_worker_error(item)
+        return item
+
+    def _raise_worker_error(self, item) -> None:
+        _, _, node, tname, msg, tb = item
+        self.close()  # the distributed graph state is poisoned — tear down
+        raise WorkerError(
+            f"worker for node {node} failed: {tname}: {msg}",
+            node=node, remote_traceback=tb) from RemoteTraceback(tb)
+
+    def _check_alive(self) -> None:
+        dead = [(n, p.exitcode) for n, p in self._procs.items()
+                if not p.is_alive()]
+        if not dead:
+            return
+        # a posted error message beats a bare exit code
+        try:
+            while True:
+                item = self._driver_q.get_nowait()
+                if item[0] == "error":
+                    self._raise_worker_error(item)
+        except queue.Empty:
+            pass
+        n, code = dead[0]
+        self.close()
+        raise WorkerError(
+            f"worker for node {n} died (exit code {code})", node=n)
+
+    def _raise_timeout(self, e, effective) -> None:
+        # best-effort fire counts so the error names every unfired actor
+        for n in self.nodes:
+            self._node_qs[n].put(("stats", e))
+        fired: Dict[str, int] = {}
+        t_end = time.monotonic() + 3.0
+        got = 0
+        while got < len(self.nodes) and time.monotonic() < t_end:
+            try:
+                item = self._driver_q.get(timeout=0.2)
+            except queue.Empty:
+                continue
+            if item[0] == "stats" and item[1] == e:
+                got += 1
+                fired.update(item[3][3])
+        unfired = [f"{name}={fired.get(name, '?')}/{eff}"
+                   for name, eff in effective.items()
+                   if eff is not None and fired.get(name, -1) != eff]
+        raise TimeoutError(
+            "process actor runtime did not complete: " + ", ".join(unfired))
+
+    # -- teardown ----------------------------------------------------------------
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for q_ in self._node_qs.values():
+            try:
+                q_.put(("stop",))
+            except Exception:
+                pass
+        for p in self._procs.values():
+            p.join(timeout=2.0)
+        for p in self._procs.values():
+            if p.is_alive():
+                p.terminate()
+        for p in self._procs.values():
+            p.join(timeout=1.0)
+
+    def __del__(self):  # best-effort; daemon workers die with the parent anyway
+        try:
+            self.close()
+        except Exception:
+            pass

@@ -21,6 +21,30 @@ class TestAddressing:
         with pytest.raises(ValueError):
             make_actor_id(1 << 12, 0, 0, 0)
 
+    def test_roundtrip_at_field_maxima(self):
+        """Every field at its widest legal value survives the 64-bit pack
+        (node/thread 12 bits, queue 8, index 32) — off-by-one masking in
+        either direction would corrupt a neighbouring field here."""
+        fields = ((1 << 12) - 1, (1 << 12) - 1, (1 << 8) - 1, (1 << 32) - 1)
+        aid = make_actor_id(*fields)
+        assert parse_actor_id(aid) == fields
+        assert aid == (1 << 64) - 1
+        assert parse_actor_id(make_actor_id(0, 0, 0, 0)) == (0, 0, 0, 0)
+
+    @pytest.mark.parametrize("field,bad", [
+        ("node", (1 << 12, 0, 0, 0)),
+        ("thread", (0, 1 << 12, 0, 0)),
+        ("queue", (0, 0, 1 << 8, 0)),
+        ("actor", (0, 0, 0, 1 << 32)),
+        ("node", (-1, 0, 0, 0)),
+        ("actor", (0, 0, 0, -1)),
+    ])
+    def test_each_field_rejected_past_its_width(self, field, bad):
+        """One past the width (and negatives) must fail fast *naming the
+        field*, not silently alias into a neighbouring field's bits."""
+        with pytest.raises(ValueError, match=field):
+            make_actor_id(*bad)
+
     def test_ids_unique_and_hierarchical(self):
         ids = {make_actor_id(n, t, 0, i)
                for n in range(3) for t in range(3) for i in range(5)}
@@ -170,21 +194,66 @@ class TestThreadedRuntime:
         with pytest.raises(RuntimeError, match="kaboom"):
             ThreadedRuntime(specs).run(timeout=10.0)
 
-    def test_run_is_single_use(self):
-        """A second run() on the same instance would reuse exhausted actors
-        and accumulate threads/outputs — the contract is one runtime per
-        run, enforced with a clear error."""
+    def test_run_is_reusable(self):
+        """A runtime is built once and re-run per epoch: actors reset at the
+        start of each run (fire counts, registers, instrumentation), so two
+        runs yield identical results and counters stay inspectable between
+        them — the persistent executors rely on this."""
+        seen = []
         specs = [
-            ActorSpec("src", _noop, (), out_regs=2, max_fires=3, thread=0),
+            ActorSpec("src", lambda version: version, (), out_regs=2,
+                      max_fires=3, thread=0, wants_version=True),
+            ActorSpec("sink", lambda x: seen.append(x) or x, ("src",),
+                      out_regs=1, thread=1),
+        ]
+        rt = ThreadedRuntime(specs, collect_outputs_of="sink")
+        assert rt.run(timeout=30.0) == [0, 1, 2]
+        # post-run counters inspectable until the next run resets them
+        assert rt.by_name["src"].fired == 3
+        assert rt.last_fired == {"src": 3, "sink": 3}
+        assert rt.run(timeout=30.0) == [0, 1, 2]
+        assert seen == [0, 1, 2, 0, 1, 2]
+
+    def test_run_fires_override_and_ctx(self):
+        """Per-epoch `fires` overrides the spec bound (serve rounds vary
+        their work count) and `ctx` reaches on_epoch hooks before any
+        fire; unknown names are rejected."""
+        base = [10]
+
+        def set_base(v):
+            if v is not None:
+                base[0] = v
+
+        specs = [
+            ActorSpec("src", lambda version: base[0] + version, (),
+                      out_regs=2, max_fires=0, thread=0, wants_version=True,
+                      on_epoch=set_base),
             ActorSpec("sink", lambda x: x, ("src",), out_regs=1, thread=1),
         ]
         rt = ThreadedRuntime(specs, collect_outputs_of="sink")
-        assert len(rt.run(timeout=30.0)) == 3
-        with pytest.raises(RuntimeError, match="already consumed"):
-            rt.run(timeout=30.0)
-        # per-run executors build a fresh runtime instead
-        rt2 = ThreadedRuntime(specs, collect_outputs_of="sink")
-        assert len(rt2.run(timeout=30.0)) == 3
+        assert rt.run(fires={"src": 2}, timeout=30.0) == [10, 11]
+        assert rt.run(ctx={"src": 100}, fires={"src": 3},
+                      timeout=30.0) == [100, 101, 102]
+        with pytest.raises(ValueError, match="unknown actor"):
+            rt.run(ctx={"nope": 1}, fires={"src": 1})
+
+    def test_timeout_names_unfired_actors(self):
+        """A hung epoch times out with the *unfinished bounded actors and
+        their fired/max counts* in the message — the only debuggable handle
+        when a distributed run wedges."""
+        import threading
+        gate = threading.Event()
+        specs = [
+            ActorSpec("src", lambda: gate.wait(timeout=30.0), (), out_regs=1,
+                      max_fires=3, thread=0),
+            ActorSpec("sink", lambda x: x, ("src",), out_regs=1, thread=1),
+        ]
+        rt = ThreadedRuntime(specs)
+        try:
+            with pytest.raises(TimeoutError, match=r"src=\d/3"):
+                rt.run(timeout=0.3)
+        finally:
+            gate.set()
 
 
 class TestPipelineSchedules:

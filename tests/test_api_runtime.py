@@ -1,0 +1,130 @@
+"""The ``runtime=`` compile option: process-backed sessions must be
+bit-identical to the threaded and monolithic paths for all three modes.
+
+These tests spawn real worker processes (one per node id) through the
+public API only — ``api.compile(..., runtime="processes")`` — and compare
+with :func:`repro.api.assert_sessions_match`, which checks losses, grads,
+params and optimizer state bitwise. Each pairing gets a *fresh* monolithic
+reference session: ``assert_sessions_match(steps=N)`` advances both sides.
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.registry import get_config
+from repro.core.graph import LogicalGraph
+from repro.core.lowering import OptimizerSpec
+from repro.core.placement import Placement
+
+B, W, S, M = 16, 32, 4, 4
+
+
+def _graph(with_loss=True, depth=S):
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (B, W))
+    if with_loss:
+        labels = g.input("labels", (B,), dtype="int32")
+    for i in range(depth):
+        w = g.input(f"w{i}", (W, W))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < depth - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    if with_loss:
+        g.softmax_xent(h, labels, name="loss")
+    return g
+
+
+def _params_and_data(g, seed=0):
+    rng = np.random.default_rng(seed)
+    params, data = {}, {}
+    for t in g.inputs:
+        if t.name.startswith("w"):
+            params[t.name] = (rng.normal(size=t.shape) * 0.1).astype(
+                np.float32)
+        elif t.dtype == "int32":
+            data[t.name] = rng.integers(0, W, size=t.shape).astype(np.int32)
+        else:
+            data[t.name] = rng.normal(size=t.shape).astype(np.float32)
+    return params, data
+
+
+class TestRuntimeOption:
+    def test_unknown_runtime_rejected(self):
+        with pytest.raises(ValueError, match="runtime"):
+            api.compile(_graph(False), mode="infer", stages=2,
+                        num_microbatches=M, microbatch_inputs=["x"],
+                        runtime="fibers")
+
+    def test_runtime_requires_actor_backend(self):
+        with pytest.raises(ValueError, match="backend='actors'"):
+            api.compile(_graph(False), mode="infer", backend="monolithic",
+                        num_microbatches=M, microbatch_inputs=["x"],
+                        runtime="threads")
+
+
+class TestProcessSessions:
+    def test_infer_three_way_and_reuse(self):
+        """threads == processes == monolithic, bitwise; the process session
+        is then re-fed new inputs (persistent workers, fresh epoch)."""
+        gi = _graph(with_loss=False)
+        params, data = _params_and_data(gi)
+        inputs = {**params, **data}
+        kw = dict(mode="infer", stages=S, num_microbatches=M,
+                  microbatch_inputs=["x"])
+        st = api.compile(gi, runtime="threads", **kw)
+        sp = api.compile(gi, runtime="processes", **kw)
+        sm = api.compile(gi, backend="monolithic", num_microbatches=M,
+                         microbatch_inputs=["x"])
+        try:
+            api.assert_sessions_match(st, sm, inputs)
+            api.assert_sessions_match(sp, sm, inputs)
+            # runtime reuse across epochs with new inputs
+            api.assert_sessions_match(
+                sp, sm, dict(inputs, x=inputs["x"] + 1.0))
+            assert "runtime=processes" in sp.describe()
+            assert "runtime=threads" in st.describe()
+            assert any(v > 0 for v in sp.executor.last_edge_bytes.values())
+        finally:
+            sp.close()
+            st.close()
+
+    def test_train_three_way_adamw(self):
+        """3 training steps, AdamW + global-norm clipping: losses, grads,
+        params and optimizer state all bitwise-equal across runtimes."""
+        gt = _graph()
+        params, data = _params_and_data(gt)
+        opt = OptimizerSpec.adamw(lr=1e-2, grad_clip=1.0)
+        kw = dict(mode="train", stages=S, num_microbatches=M, optimizer=opt)
+        tt = api.compile(_graph(), runtime="threads",
+                         params=dict(params), **kw)
+        tp = api.compile(_graph(), runtime="processes",
+                         params=dict(params), **kw)
+        mono = lambda: api.compile(_graph(), backend="monolithic",
+                                   params=dict(params), optimizer=opt,
+                                   mode="train", num_microbatches=M)
+        try:
+            api.assert_sessions_match(tt, mono(), data, steps=3)
+            api.assert_sessions_match(tp, mono(), data, steps=3)
+        finally:
+            tp.close()
+            tt.close()
+
+    def test_serve_token_streams_match(self):
+        cfg = get_config("qwen2.5-3b").reduced()
+        serve_kw = dict(mode="serve", num_groups=2, group_size=2,
+                        max_prompt_len=8, max_new_tokens=4)
+        vm = api.compile(cfg, backend="monolithic", **serve_kw)
+        vp = api.compile(cfg, runtime="processes", stages=2, **serve_kw)
+        reqs = [(np.array([3, 1, 4, 1], np.int32), 4),
+                (np.array([2, 7], np.int32), 3),
+                (np.array([5], np.int32), 4)]
+        try:
+            om = vm.generate(reqs)
+            op = vp.generate(reqs)
+            assert len(om) == len(op) == len(reqs)
+            for i, (a, b) in enumerate(zip(om, op)):
+                assert np.array_equal(a, b), (i, a, b)
+            assert "runtime=processes" in vp.describe()
+        finally:
+            vp.close()
