@@ -1,0 +1,157 @@
+"""Async snapshot actors: checkpointing must stay off the hot path.
+
+The ``snap{s}`` actors subscribe to the optimizer actors' output registers
+and serialize each stage's post-update params + AdamW moments from their
+own mailbox thread, so the 1F1B schedule never waits on disk. This bench
+runs the same emulated-latency 4-stage AdamW pipeline as
+``bench_1f1b_adamw`` with snapshots off vs snapshots every step and gates
+the makespan ratio at 1.1x — checkpointing costs at most 10% of a step.
+
+Correctness gate before timing: both executors' losses are bitwise equal,
+and the final snapshot on disk round-trips bitwise to the live params and
+optimizer moments.
+
+Writes ``BENCH_snapshot_overhead.json``. Set ``BENCH_SMOKE=1`` for one
+repetition per variant (the CI smoke job); the gates still run.
+"""
+import json
+import os
+import pathlib
+import sys
+import tempfile
+import time
+
+STAGES = 4
+MICROBATCHES = 8
+BATCH = 64
+WIDTH = 128
+FWD_LATENCY = 0.02              # emulated per-stage device time (seconds)
+BWD_LATENCY = 0.04
+GRAD_CLIP = 1.0
+MAX_OVERHEAD = 1.10             # snapshotting may cost <= 10% of a step
+
+
+def lr_schedule(step: int) -> float:
+    return 1e-3 * (0.9 ** step)
+
+
+def main():
+    sys.path.insert(0, "src")
+    import numpy as np
+
+    from benchmarks._util import emit
+    from repro.core.graph import LogicalGraph, partition_stages
+    from repro.core.lowering import OptimizerSpec, lower_train_stages
+    from repro.core.placement import Placement
+    from repro.core.planner import plan
+    from repro.runtime import TrainPipelineExecutor
+    from repro.runtime.snapshot import latest_snapshot, load_snapshot
+
+    import jax
+
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    reps = 1 if smoke else 3
+
+    devs = jax.devices()
+    if len(devs) < STAGES:
+        raise RuntimeError(f"need {STAGES} devices, have {len(devs)}")
+
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (BATCH, WIDTH))
+    labels = g.input("labels", (BATCH,), dtype="int32")
+    for i in range(STAGES):
+        w = g.input(f"w{i}", (WIDTH, WIDTH))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < STAGES - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+
+    opt = OptimizerSpec.adamw(lr=lr_schedule, grad_clip=GRAD_CLIP)
+    p = plan(g)
+    part = partition_stages(g, num_stages=STAGES)
+    stage_meshes = [placement.to_mesh(devices=[devs[s]])
+                    for s in range(STAGES)]
+    tstaged = lower_train_stages(g, p, part,
+                                 [f"w{i}" for i in range(STAGES)],
+                                 stage_meshes=stage_meshes, optimizer=opt)
+
+    rng = np.random.default_rng(0)
+    params = {f"w{i}": (rng.normal(size=(WIDTH, WIDTH)) * 0.5
+                        ).astype(np.float32) for i in range(STAGES)}
+    data = {"x": rng.normal(size=(BATCH, WIDTH)).astype(np.float32),
+            "labels": rng.integers(0, WIDTH, size=(BATCH,)).astype(np.int32)}
+
+    def with_latency(kind, stage_index, fn):
+        delay = FWD_LATENCY if kind == "fwd" else BWD_LATENCY
+
+        def body(*args):
+            out = fn(*args)
+            time.sleep(delay)
+            return out
+        return body
+
+    quota = [max(1, STAGES - s) for s in range(STAGES)]
+
+    def measure(snapshot_dir):
+        ex = TrainPipelineExecutor(tstaged, dict(params), ["x", "labels"],
+                                   MICROBATCHES, regs=quota,
+                                   fn_wrap=with_latency,
+                                   snapshot_dir=snapshot_dir)
+        best, losses = None, []
+        for _ in range(reps):
+            loss, _, _ = ex.step(data)
+            losses.append(float(loss))
+            span = ex.last_makespan
+            best = span if best is None else min(best, span)
+        return best, losses, ex
+
+    with tempfile.TemporaryDirectory() as d:
+        base_best, base_losses, _ = measure(None)
+        snap_best, snap_losses, ex = measure(d)
+
+        # -- correctness gates ---------------------------------------------
+        if snap_losses != base_losses:
+            raise RuntimeError(
+                f"snapshotting changed training bits: {snap_losses} vs "
+                f"{base_losses}")
+        if latest_snapshot(d) != reps:
+            raise RuntimeError(
+                f"expected {reps} completed snapshots, found "
+                f"{latest_snapshot(d)}")
+        got_params, got_opt, step, _ = load_snapshot(d)
+        assert step == reps
+        live_opt = ex.opt_state
+        for n, v in ex.params.items():
+            if not np.array_equal(np.asarray(got_params[n]), np.asarray(v)):
+                raise RuntimeError(f"snapshot param {n} != live param")
+            if not np.array_equal(np.asarray(got_opt.mu[n]),
+                                  np.asarray(live_opt.mu[n])):
+                raise RuntimeError(f"snapshot moment {n} != live moment")
+
+    ratio = snap_best / base_best
+    emit("snapshot_overhead/no_snapshot", base_best * 1e6,
+         f"S={STAGES};M={MICROBATCHES}")
+    emit("snapshot_overhead/snapshot_every_step", snap_best * 1e6,
+         f"S={STAGES};M={MICROBATCHES};ratio={ratio:.3f}")
+
+    out = {
+        "stages": STAGES, "microbatches": MICROBATCHES,
+        "fwd_latency_s": FWD_LATENCY, "bwd_latency_s": BWD_LATENCY,
+        "no_snapshot_s": base_best, "snapshot_every_step_s": snap_best,
+        "overhead_ratio": ratio, "max_overhead_ratio": MAX_OVERHEAD,
+        "quota_1f1b": quota,
+        "optimizer": "adamw", "grad_clip": GRAD_CLIP,
+    }
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "BENCH_snapshot_overhead.json")
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    if ratio > MAX_OVERHEAD:
+        raise RuntimeError(
+            f"snapshot overhead {ratio:.3f}x exceeds the "
+            f"{MAX_OVERHEAD}x budget "
+            f"({snap_best:.3f}s vs {base_best:.3f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,9 @@ subprocesses with placeholder host devices (the main process keeps 1 device).
   §5 Fig 7/8-> bench_process_pipeline     (subprocess; also writes
               BENCH_process_pipeline.json: threaded vs process-backed
               runtime on the same train/serve pipelines, bitwise-gated)
+  snapshots -> bench_snapshot_overhead    (subprocess; also writes
+              BENCH_snapshot_overhead.json: async snap{s} actors on vs
+              off, overhead gated at 1.1x, bitwise + roundtrip gated)
 
 ``--smoke`` runs only the BENCH_*.json-writing benchmarks, one repetition
 each (BENCH_SMOKE=1), so CI keeps the recording code paths honest without
@@ -36,7 +39,7 @@ import traceback
 
 BENCH_WRITERS = ("bench_actor_pipeline", "bench_1f1b_train",
                  "bench_1f1b_adamw", "bench_serve_pipeline",
-                 "bench_process_pipeline")
+                 "bench_process_pipeline", "bench_snapshot_overhead")
 
 
 def main() -> None:

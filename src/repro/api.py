@@ -166,6 +166,21 @@ class _MonolithicTrainEngine:
             raise ValueError(f"missing params: {missing}")
         self.params = {n: params[n] for n in self.param_names}
 
+    def load_state(self, params: Optional[Dict[str, Any]] = None,
+                   opt_state=None, step: Optional[int] = None) -> None:
+        """Restore full training state (e.g. from a snapshot): params,
+        optimizer state, and the step counter the lr schedule indexes."""
+        if params is not None:
+            self.load_params(params)
+        if opt_state is not None:
+            if not self.optimizer.stateful:
+                raise ValueError(
+                    "opt_state= for a stateless optimizer "
+                    f"({self.optimizer.kind})")
+            self.opt_state = opt_state
+        if step is not None:
+            self.step_count = int(step)
+
     def step(self, data_inputs: Dict[str, Any], timeout: float = 0.0):
         import jax.numpy as jnp
 
@@ -289,6 +304,19 @@ class Session:
         if self.mode != "train":
             raise RuntimeError("load_params() on an inference session")
         self._engine.load_params(params)
+
+    def load_state(self, params: Optional[Dict[str, Any]] = None,
+                   opt_state=None, step: Optional[int] = None) -> None:
+        """Restore full training state — params, merged optimizer state,
+        and the step counter — e.g. from
+        :func:`repro.runtime.snapshot.load_snapshot`. Each piece is optional
+        and independent; the actor backend re-splits ``opt_state`` by *this*
+        session's stage partition, so a snapshot taken under one partition
+        restores onto another (elastic resume)."""
+        if self.mode != "train":
+            raise RuntimeError("load_state() on an inference session")
+        self._engine.load_state(params=params, opt_state=opt_state,
+                                step=step)
 
     def close(self) -> None:
         """Release the engine's workers (actor threads or worker processes).
@@ -753,6 +781,18 @@ def _resolve_regs(regs, partition: StagePartition, num_microbatches: int,
     return regs, None
 
 
+def _apply_restore(sess: "Session", restore) -> "Session":
+    """Resolve ``compile(restore=<snapshot dir>)``: load the newest completed
+    snapshot and install it as the session's full training state."""
+    if restore is None:
+        return sess
+    from repro.runtime.snapshot import load_snapshot
+
+    params, opt_state, step, _ = load_snapshot(str(restore))
+    sess.load_state(params=params, opt_state=opt_state, step=step)
+    return sess
+
+
 def compile(graph, *, mode: str = "infer",
             backend: str = "actors", runtime: Optional[str] = None,
             plan: Optional[Plan] = None,
@@ -763,6 +803,8 @@ def compile(graph, *, mode: str = "infer",
             params: Optional[Dict[str, Any]] = None, loss=None,
             lr: float = 1e-2, mesh=None, stage_meshes=None,
             fn_wrap=None, timeout: float = 300.0,
+            snapshot_dir=None, snapshot_every: int = 1,
+            restore=None, faults=None,
             num_groups: Optional[int] = None,
             group_size: Optional[int] = None,
             cache_len: Optional[int] = None,
@@ -824,6 +866,19 @@ def compile(graph, *, mode: str = "infer",
       MPMD placement (actors backend only).
     * ``fn_wrap``: optional stage-body decorator (benchmarks use it to
       emulate device latency; actors backend only).
+    * ``snapshot_dir`` / ``snapshot_every`` (train + actors only): write an
+      async snapshot every N steps — one ``snap{s}`` actor per parameterized
+      stage serializes that stage's post-update params + optimizer state off
+      the schedule's hot path (:mod:`repro.runtime.snapshot`).
+    * ``restore`` (train only): a ``snapshot_dir`` from an earlier session;
+      the newest *completed* snapshot there becomes the session's initial
+      params/optimizer state/step counter. Partition-agnostic — a snapshot
+      taken on 4 stages restores onto 2 stages or the monolithic backend.
+      ``params=`` is still required (shapes/ordering) but is overridden.
+    * ``faults`` (train + actors only): a
+      :class:`repro.runtime.chaos.FaultPlan` injected into the runtime —
+      kill a named actor at its Nth fire, delay/duplicate a Req, drop an
+      ack. The fault-tolerance tests drive kill-and-resume through this.
 
     The monolithic backend accepts but does not use the schedule hints
     ``partition``/``stages``/``regs`` (so one kwargs dict can sweep both
@@ -845,6 +900,31 @@ def compile(graph, *, mode: str = "infer",
             "to choose)")
     if runtime is None and backend == "actors":
         runtime = "threads"
+    if mode != "train":
+        train_only = {"snapshot_dir": snapshot_dir, "restore": restore,
+                      "faults": faults}
+        bad = [k for k, v in train_only.items() if v is not None]
+        if bad or snapshot_every != 1:
+            bad = bad or ["snapshot_every"]
+            raise ValueError(
+                f"{bad[0]}= is only meaningful for mode='train' "
+                "(snapshots/restore/fault injection act on training state)")
+    else:
+        if backend != "actors":
+            if snapshot_dir is not None:
+                raise ValueError(
+                    "snapshot_dir= requires backend='actors' (snapshots are "
+                    "written by per-stage snap actors; checkpoint a "
+                    "monolithic session with repro.train.checkpoint)")
+            if faults is not None:
+                raise ValueError(
+                    "faults= requires backend='actors' (there are no "
+                    "workers or messages to inject faults into)")
+        if snapshot_every < 1:
+            raise ValueError(
+                f"snapshot_every must be >= 1, got {snapshot_every}")
+        if snapshot_dir is None and snapshot_every != 1:
+            raise ValueError("snapshot_every= without snapshot_dir=")
     if mode == "serve":
         rejected = {"plan": plan, "partition": partition,
                     "optimizer": optimizer, "loss": loss,
@@ -934,11 +1014,12 @@ def compile(graph, *, mode: str = "infer",
                                             microbatch_inputs,
                                             num_microbatches, optimizer,
                                             loss=loss)
-        return Session(graph=graph, mode=mode, backend=backend,
+        sess = Session(graph=graph, mode=mode, backend=backend,
                        engine=engine, plan=plan, partition=None, regs=None,
                        reg_plan=None, optimizer=optimizer,
                        microbatch_inputs=microbatch_inputs,
                        num_microbatches=num_microbatches, timeout=timeout)
+        return _apply_restore(sess, restore)
 
     part = _resolve_partition(graph, partition, stages)
     regs, reg_plan = _resolve_regs(regs, part, num_microbatches, mode)
@@ -974,12 +1055,16 @@ def compile(graph, *, mode: str = "infer",
         engine = TrainPipelineExecutor(tstaged, params, microbatch_inputs,
                                        num_microbatches, lr=lr, regs=regs,
                                        fn_wrap=fn_wrap, optimizer=optimizer,
-                                       runtime=runtime, recipe=recipe)
-    return Session(graph=graph, mode=mode, backend=backend, engine=engine,
+                                       runtime=runtime, recipe=recipe,
+                                       snapshot_dir=snapshot_dir,
+                                       snapshot_every=snapshot_every,
+                                       faults=faults)
+    sess = Session(graph=graph, mode=mode, backend=backend, engine=engine,
                    plan=plan, partition=part, regs=regs, reg_plan=reg_plan,
                    optimizer=optimizer, microbatch_inputs=microbatch_inputs,
                    num_microbatches=num_microbatches, timeout=timeout,
                    runtime=runtime)
+    return _apply_restore(sess, restore)
 
 
 def _assert_tree_equal(name: str, a, b, context: str) -> None:

@@ -546,6 +546,40 @@ class OptimizerSpec:
                 weight_decay=self.weight_decay)
         return new_p, AdamWState(new_step, new_mu, new_nu)
 
+    def split_state(self, state, stage_param_names: Dict[int, Sequence[str]]):
+        """Split a merged optimizer state into per-stage states keyed by
+        stage index (the snapshot-restore tap: a state saved under one
+        stage partition re-splits under another). ``stage_param_names``
+        maps stage index -> that stage's param names. Stateless optimizers
+        split to None entries."""
+        if not self.stateful or state is None:
+            return {s: None for s in stage_param_names}
+        from repro.optim.adamw import AdamWState
+        out = {}
+        for s, names in stage_param_names.items():
+            missing = [n for n in names if n not in state.mu]
+            if missing:
+                raise ValueError(
+                    f"optimizer state missing moments for params {missing}")
+            out[s] = AdamWState(state.step,
+                                {n: state.mu[n] for n in names},
+                                {n: state.nu[n] for n in names})
+        return out
+
+    def merge_states(self, states: Sequence[Any]):
+        """Inverse of :meth:`split_state`: merge per-stage states into one
+        state over all params (None for a stateless optimizer)."""
+        if not self.stateful:
+            return None
+        from repro.optim.adamw import AdamWState
+        states = [s for s in states if s is not None]
+        mu: Dict[str, Any] = {}
+        nu: Dict[str, Any] = {}
+        for st in states:
+            mu.update(st.mu)
+            nu.update(st.nu)
+        return AdamWState(states[0].step, mu, nu) if states else None
+
 
 def _zero_cot(v):
     """Zero cotangent matching ``v``: zeros for inexact dtypes, a float0

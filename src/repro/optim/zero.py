@@ -110,10 +110,7 @@ def master_shapes(params_global, specs, plan: MeshPlan):
                         is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
 
 
-zero_state_shapes = None  # replaced below for backwards compatibility
-
-
-def zero_state_shapes(params_global, specs, plan: MeshPlan):  # noqa: F811
+def zero_state_shapes(params_global, specs, plan: MeshPlan):
     m = master_shapes(params_global, specs, plan)
     return ZeroState(jax.ShapeDtypeStruct((), jnp.int32), m,
                      jax.tree.map(lambda x: x, m))

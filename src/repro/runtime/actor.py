@@ -62,6 +62,16 @@ class Actor:
         # in-register state: channel -> FIFO of Req (holding payload refs)
         self.in_queues: Dict[str, collections.deque] = {
             ch: collections.deque() for ch in spec.inputs}
+        # per-channel resequencer: a producer with emit_every=k emits
+        # versions k-1, 2k-1, ... — `in_stride`/`in_next` track the next
+        # expected version so duplicated or reordered Req deliveries (a
+        # lossy transport, or chaos injection) are deduplicated/reordered
+        # here instead of corrupting the FIFO. build_actors fills the real
+        # strides from the producers' specs.
+        self.in_stride: Dict[str, int] = {ch: 1 for ch in spec.inputs}
+        self.in_next: Dict[str, int] = {ch: 0 for ch in spec.inputs}
+        self.in_pending: Dict[str, Dict[int, Req]] = {
+            ch: {} for ch in spec.inputs}
         # out-register state
         self.out_counter = spec.out_regs
         self.refcount: Dict[int, int] = {}          # reg instance -> refs
@@ -82,6 +92,8 @@ class Actor:
         actor across runs. ``max_fires`` overrides the spec's bound for this
         epoch only (serve rounds vary their work count)."""
         self.in_queues = {ch: collections.deque() for ch in self.spec.inputs}
+        self.in_next = {ch: s - 1 for ch, s in self.in_stride.items()}
+        self.in_pending = {ch: {} for ch in self.spec.inputs}
         self.out_counter = self.spec.out_regs
         self.refcount.clear()
         self.reg_payload.clear()
@@ -97,7 +109,31 @@ class Actor:
 
     # -- message handling -------------------------------------------------------
     def on_req(self, msg: Req) -> None:
-        self.in_queues[msg.channel].append(msg)
+        """Accept a produced register: dedup + resequence per channel.
+
+        A duplicate delivery (version already consumed or already pending)
+        is dropped *without* an ack — the first copy acks exactly once when
+        consumed, so the producer's reference counter stays consistent. An
+        early delivery (a later version overtaking an in-flight one) is
+        buffered until the versions before it arrive, preserving the
+        in-order FIFO the fire path consumes. In-order delivery — every
+        non-chaotic transport — hits the buffer-and-drain path with an
+        empty buffer.
+        """
+        ch = msg.channel
+        nxt = self.in_next.get(ch)
+        if nxt is None:                      # undeclared channel: legacy FIFO
+            self.in_queues[ch].append(msg)
+            return
+        pend = self.in_pending[ch]
+        if msg.version < nxt or msg.version in pend:
+            return
+        pend[msg.version] = msg
+        stride = self.in_stride[ch]
+        while nxt in pend:
+            self.in_queues[ch].append(pend.pop(nxt))
+            nxt += stride
+        self.in_next[ch] = nxt
 
     def on_ack(self, msg: Ack) -> bool:
         """Returns True when the ack recycled the register (last reference)."""
@@ -209,4 +245,12 @@ def build_actors(specs: Sequence[ActorSpec]):
         a.consumer_names = {cid: names_by_id[cid] for cid, _ in a.consumers}
         by_name[s.name] = a
         by_id[a.actor_id] = a
+    # resequencer strides: a producer with emit_every=k emits versions
+    # k-1, 2k-1, ... on its channel
+    for s in specs:
+        a = by_name[s.name]
+        for producer_name in s.inputs:
+            stride = max(1, by_name[producer_name].spec.emit_every)
+            a.in_stride[producer_name] = stride
+            a.in_next[producer_name] = stride - 1
     return by_name, by_id

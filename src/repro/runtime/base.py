@@ -130,13 +130,15 @@ def _check_epoch_names(specs, ctx, fires) -> None:
 
 
 def make_runtime(kind: str, builder: SpecBuilder,
-                 collect_outputs_of=None) -> Runtime:
+                 collect_outputs_of=None, faults=None) -> Runtime:
     """Build a runtime of ``kind`` over the actor graph ``builder`` yields.
 
     ``"threads"`` calls the builder in-process and drives every actor on OS
     threads; ``"processes"`` ships the (picklable) builder to one worker
     process per node id. ``collect_outputs_of`` overrides the builder's own
-    collect choice when given.
+    collect choice when given. ``faults`` is an optional
+    :class:`repro.runtime.chaos.FaultPlan` injected deterministically into
+    the engines (kill-at-fire, delayed/duplicated Reqs, dropped Acks).
     """
     if kind not in RUNTIME_KINDS:
         raise ValueError(
@@ -146,6 +148,8 @@ def make_runtime(kind: str, builder: SpecBuilder,
         specs, collect = builder()
         if collect_outputs_of is not None:
             collect = collect_outputs_of
-        return ThreadedRuntime(specs, collect_outputs_of=collect)
+        return ThreadedRuntime(specs, collect_outputs_of=collect,
+                               faults=faults)
     from repro.runtime.process import ProcessRuntime
-    return ProcessRuntime(builder, collect_outputs_of=collect_outputs_of)
+    return ProcessRuntime(builder, collect_outputs_of=collect_outputs_of,
+                          faults=faults)

@@ -1,0 +1,186 @@
+"""Deterministic fault injection on the Runtime seam (elastic-training gate).
+
+The paper's actor model claims the register/counter protocol — not timing
+luck — carries correctness: every dependency (data, resources, movement) is
+an explicit counter, so a delayed, duplicated or reordered message must
+never change *what* is computed, only *when*. This module turns that claim
+into exercised code: a picklable :class:`FaultPlan` rides into either
+runtime through ``make_runtime(kind, builder, faults=...)`` and a
+:class:`FaultInjector` applies the faults deterministically:
+
+* :class:`KillWorker` — raise :class:`WorkerKilled` (threads) or hard-exit
+  the worker process (processes, ``os._exit``) immediately before the named
+  actor's Nth fire. Exercises the PR-6 ``WorkerError``/dead-worker/Mattern
+  machinery and the snapshot-restore path end to end.
+* :class:`DelayEdge` — deliver one ``Req`` on a named edge late. Sound by
+  construction: the producer's register stays referenced until the consumer
+  acks, so the epoch cannot conclude under a delayed message (the Mattern
+  probe sees ``live > 0`` / unbalanced counters).
+* :class:`DuplicateReq` — deliver one ``Req`` twice. The consumer-side
+  per-channel resequencer (:meth:`repro.runtime.actor.Actor.on_req`) drops
+  the second copy *without* acking it, so the producer's refcount stays
+  consistent.
+* :class:`DropAck` — swallow one ``Ack``. The producer's register is never
+  recycled, so a quota-bound producer wedges and the epoch surfaces as the
+  runtime's ``TimeoutError`` naming the stuck actor — a *detected* fault,
+  never silent corruption.
+
+Faults are one-shot: each entry triggers at most once per injector (per
+worker process under ``runtime="processes"`` — routing happens only at the
+sending engine, so a fault still applies exactly once per edge).
+
+Delayed delivery runs on a daemon ``threading.Timer``. A timer that
+outlives its epoch (possible only after the epoch was already abandoned by
+timeout/error) drops its message instead of poisoning the next epoch: the
+timer captures the epoch counter and the epoch's own mailbox table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple, Union
+
+from repro.runtime.base import WorkerError
+from repro.runtime.messages import Req
+
+#: Exit code a process worker dies with under :class:`KillWorker` — the
+#: driver's liveness probe reports it in the ``WorkerError`` message.
+KILL_EXIT_CODE = 57
+
+
+class WorkerKilled(WorkerError):
+    """A :class:`KillWorker` fault fired under ``runtime="threads"``.
+
+    Subclasses :class:`WorkerError` so kill-and-resume callers catch one
+    exception type for both runtimes (process workers die for real and
+    surface as the ordinary dead-worker ``WorkerError``).
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class KillWorker:
+    """Kill the worker hosting ``actor`` immediately before its Nth fire
+    (``fire`` is 1-based and cumulative across epochs/steps)."""
+
+    actor: str
+    fire: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayEdge:
+    """Hold the ``Req`` for ``version`` on edge ``src -> dst`` for
+    ``seconds`` before delivering it (``version=None``: the first Req seen
+    on the edge)."""
+
+    src: str
+    dst: str
+    seconds: float = 0.05
+    version: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DuplicateReq:
+    """Deliver the ``Req`` for ``version`` on edge ``src -> dst`` twice."""
+
+    src: str
+    dst: str
+    version: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DropAck:
+    """Swallow the ``Ack`` for ``version`` on edge ``src -> dst`` (``src``
+    is the consumer sending the ack, ``dst`` the producer awaiting it)."""
+
+    src: str
+    dst: str
+    version: int = 0
+
+
+Fault = Union[KillWorker, DelayEdge, DuplicateReq, DropAck]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, picklable set of faults to inject into one run."""
+
+    faults: Tuple[Fault, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+        kinds = (KillWorker, DelayEdge, DuplicateReq, DropAck)
+        for f in self.faults:
+            if not isinstance(f, kinds):
+                raise ValueError(f"unknown fault type: {f!r}")
+
+    @property
+    def kills(self) -> Tuple[KillWorker, ...]:
+        return tuple(f for f in self.faults if isinstance(f, KillWorker))
+
+
+class FaultInjector:
+    """Applies a :class:`FaultPlan` inside one ``_LocalEngine``.
+
+    The engine calls :meth:`before_fire` under the firing actor's thread and
+    :meth:`route` for every outgoing message; both are cheap no-ops once
+    every fault has triggered. One injector per engine — under
+    ``runtime="processes"`` each worker builds its own from the shipped
+    plan, and a fault naming a remote actor/edge simply never matches
+    there.
+    """
+
+    def __init__(self, plan: FaultPlan, process_mode: bool = False):
+        self.plan = plan
+        self.process_mode = process_mode
+        self._fired = {}        # actor name -> cumulative fire attempts
+        self._done = set()      # indices of consumed (one-shot) faults
+        self._armed = len(plan.faults) > 0
+
+    # -- fire-path faults --------------------------------------------------------
+    def before_fire(self, name: str) -> None:
+        """Called immediately before actor ``name`` fires; may not return."""
+        if not self._armed:
+            return
+        n = self._fired.get(name, 0) + 1
+        self._fired[name] = n
+        for i, f in enumerate(self.plan.faults):
+            if i in self._done or not isinstance(f, KillWorker):
+                continue
+            if f.actor == name and f.fire == n:
+                self._done.add(i)
+                if self.process_mode:
+                    # a real worker death: no unwind, no goodbye — the
+                    # driver's liveness probe must catch it
+                    os._exit(KILL_EXIT_CODE)
+                raise WorkerKilled(
+                    f"fault injection: killed worker at {name} fire {n}",
+                    node=None)
+
+    # -- message-path faults -----------------------------------------------------
+    def route(self, msg, src_name: str, dst_name: str):
+        """Map one outgoing message to ``[(message, delay_seconds), ...]``
+        (empty list: dropped). Called at the *sending* engine only."""
+        out = [(msg, 0.0)]
+        if not self._armed:
+            return out
+        is_req = isinstance(msg, Req)
+        for i, f in enumerate(self.plan.faults):
+            if i in self._done:
+                continue
+            if isinstance(f, DelayEdge) and is_req:
+                if (f.src == src_name and f.dst == dst_name
+                        and (f.version is None or f.version == msg.version)):
+                    self._done.add(i)
+                    out = [(m, d + f.seconds) for m, d in out]
+            elif isinstance(f, DuplicateReq) and is_req:
+                if (f.src == src_name and f.dst == dst_name
+                        and f.version == msg.version):
+                    self._done.add(i)
+                    out = out + [(msg, 0.0)]
+            elif isinstance(f, DropAck) and not is_req:
+                # Ack direction: consumer (src) -> producer (dst)
+                if (f.src == src_name and f.dst == dst_name
+                        and f.version == msg.version):
+                    self._done.add(i)
+                    out = []
+        return out

@@ -252,7 +252,7 @@ class _StagedExecutorBase:
     def __init__(self, program, microbatch_inputs: Sequence[str],
                  num_microbatches: int, regs: Optional[Sequence[int]],
                  fn_wrap: Optional[Callable] = None,
-                 runtime: str = "threads", recipe=None):
+                 runtime: str = "threads", recipe=None, faults=None):
         if num_microbatches < 1:
             raise ValueError(
                 f"num_microbatches must be >= 1, got {num_microbatches}")
@@ -279,6 +279,7 @@ class _StagedExecutorBase:
         self.fn_wrap = fn_wrap
         self.runtime_kind = runtime
         self.recipe = recipe
+        self.faults = faults          # optional chaos FaultPlan (tests/CI)
         self._rt = None
         self.last_makespan: Optional[float] = None
         self.last_history: Dict[str, List[Tuple[float, float]]] = {}
@@ -293,7 +294,8 @@ class _StagedExecutorBase:
         """The persistent :class:`repro.runtime.base.Runtime` underneath
         (built on first use)."""
         if self._rt is None:
-            self._rt = make_runtime(self.runtime_kind, self._make_builder())
+            self._rt = make_runtime(self.runtime_kind, self._make_builder(),
+                                    faults=self.faults)
         return self._rt
 
     def _run_rt(self, ctx, fires, timeout: float):
@@ -549,21 +551,26 @@ _VJP_KEY = "__vjp__"
 _GRADS_KEY = "__grads__"
 
 
-def _train_collect_names(tstaged) -> List[str]:
+def _train_collect_names(tstaged, snapshot: bool = False) -> List[str]:
     """The collect list shared by the builder and the executor: the
-    loss-bearing backward actor first, then every ``opt{s}``."""
+    loss-bearing backward actor first, then every ``opt{s}``, then (with
+    snapshotting on) every ``snap{s}`` — the write receipts the driver
+    needs before it finalizes a snapshot's MANIFEST."""
     produced_at = {n: st.index for st in tstaged.stages
                    for n in st.output_names}
     loss_stage = produced_at[tstaged.loss_name]
-    return [f"b{loss_stage}"] + [f"opt{st.index}" for st in tstaged.stages
-                                 if st.param_names]
+    param_stages = [st.index for st in tstaged.stages if st.param_names]
+    names = [f"b{loss_stage}"] + [f"opt{s}" for s in param_stages]
+    if snapshot:
+        names += [f"snap{s}" for s in param_stages]
+    return names
 
 
 def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
                             num_microbatches: int, lr: float = 1e-2,
                             regs: Optional[Sequence[int]] = None,
                             fn_wrap: Optional[Callable] = None,
-                            optimizer=None,
+                            optimizer=None, snapshot=None,
                             ) -> Tuple[List[ActorSpec], List[str]]:
     """Build the persistent fwd/bwd/opt actor graph for training steps.
 
@@ -577,7 +584,12 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
       ``load_params``). The owning worker places them on the stage mesh;
       afterwards ``opt{s}`` updates the same bound dict in place, so params
       stay device-resident in the worker across steps.
-    * ``ctx[f"opt{s}"]`` — the step index (resolves the lr schedule).
+    * ``ctx[f"opt{s}"]`` — the step index (resolves the lr schedule), as a
+      plain int or as ``{"step": int, "load_state": AdamWState-or-None}``
+      after a ``load_state`` restore (the restored moments replace the
+      worker-resident state before the epoch's first fire);
+    * ``ctx[f"snap{s}"]`` — with ``snapshot`` set, ``{"step": int,
+      "write": bool}`` controlling this epoch's checkpoint write.
 
     ``regs[s]`` is forward stage s's out-register quota (default 1F1B,
     ``num_stages - s``); backward/acc/opt actors need no tuning.
@@ -598,6 +610,14 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
       consumes — the second register stream. The state lives in the stage's
       worker across steps (initialized on the first step); the updated copy
       also rides the opt actor's output payload so the driver can mirror it.
+    * With ``snapshot`` (a :class:`repro.runtime.snapshot.SnapshotSpec`), a
+      ``snap{s}`` actor per parameterized stage consumes ``opt{s}``'s
+      output register — the stream already carrying the post-update params
+      and fresh optimizer state — and serializes the stage's slice to disk
+      from its own mailbox thread (``thread=1``) with its own register
+      quota, so checkpoint writes never sit on the schedule's thread. It
+      emits a write receipt the driver collects before finalizing the
+      snapshot manifest.
 
     Gradients are accumulated in fp32 regardless of the backward dtype
     (matching the optimizer kernels' fp32 math); the accumulator is reset
@@ -736,7 +756,15 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
         meta = {"step": 0}
 
         def on_epoch(v):
-            if v is not None:
+            if v is None:
+                return
+            if isinstance(v, dict):
+                meta["step"] = int(v["step"])
+                if "load_state" in v:
+                    # restore seam: replace the worker-resident optimizer
+                    # state before this epoch's state{s} fire emits it
+                    state_cell["state"] = v["load_state"]
+            else:
                 meta["step"] = int(v)
 
         def run_opt(acc_payload, *rest):
@@ -778,7 +806,29 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
             return out
         return run_opt, on_epoch
 
-    collect = _train_collect_names(tstaged)
+    def make_snap_fn(stage):
+        # the snapshot actor's per-epoch control cell: which step this
+        # epoch's write belongs to, and whether to write at all
+        cell = {"step": 0, "write": False}
+
+        def on_epoch(v):
+            if v is not None:
+                cell["step"] = int(v["step"])
+                cell["write"] = bool(v["write"])
+
+        def run_snap(opt_payload):
+            from repro.runtime.snapshot import write_stage_snapshot
+
+            if cell["write"]:
+                write_stage_snapshot(
+                    snapshot.dir, cell["step"], stage.index,
+                    {n: opt_payload["params"][n] for n in stage.param_names},
+                    opt_state=opt_payload.get("state"))
+            return {"stage": stage.index, "step": cell["step"],
+                    "written": cell["write"]}
+        return run_snap, on_epoch
+
+    collect = _train_collect_names(tstaged, snapshot=snapshot is not None)
     for s, stage in enumerate(tstaged.stages):
         fwd_fn, bound, fwd_on_epoch = make_fwd_fn(stage)
         bwd_fn = make_bwd_fn(stage)
@@ -821,6 +871,17 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
                 name=f"opt{s}", fn=opt_fn,
                 inputs=opt_inputs, out_regs=1, node=s + 1, thread=0,
                 max_fires=1, on_epoch=opt_on_epoch))
+            if snapshot is not None:
+                # async checkpointing as one more register-stream consumer:
+                # snap{s} subscribes to opt{s}'s output (post-update params
+                # + fresh optimizer state) on the stage node's thread 1 —
+                # its own mailbox, OS thread and register quota, so
+                # serialization never blocks the schedule on thread 0
+                snap_fn, snap_on_epoch = make_snap_fn(stage)
+                specs.append(ActorSpec(
+                    name=f"snap{s}", fn=snap_fn, inputs=(f"opt{s}",),
+                    out_regs=1, node=s + 1, thread=1,
+                    max_fires=1, on_epoch=snap_on_epoch))
 
     if clip and param_stages:
         # cross-stage *sideways* communication on the actor protocol: sum the
@@ -846,7 +907,8 @@ class TrainSpecBuilder(_SpecBuilderBase):
 
     def __init__(self, microbatch_inputs: Sequence[str],
                  num_microbatches: int, lr: float = 1e-2, regs=None,
-                 fn_wrap=None, optimizer=None, staged=None, recipe=None):
+                 fn_wrap=None, optimizer=None, staged=None, recipe=None,
+                 snapshot=None):
         super().__init__(staged=staged, recipe=recipe)
         self.microbatch_inputs = list(microbatch_inputs)
         self.num_microbatches = num_microbatches
@@ -854,12 +916,14 @@ class TrainSpecBuilder(_SpecBuilderBase):
         self.regs = None if regs is None else list(regs)
         self.fn_wrap = fn_wrap
         self.optimizer = optimizer
+        self.snapshot = snapshot      # SnapshotSpec (plain data — picklable)
 
     def __call__(self):
         return train_stage_actor_specs(self.staged, self.microbatch_inputs,
                                        self.num_microbatches, lr=self.lr,
                                        regs=self.regs, fn_wrap=self.fn_wrap,
-                                       optimizer=self.optimizer)
+                                       optimizer=self.optimizer,
+                                       snapshot=self.snapshot)
 
 
 class TrainPipelineExecutor(_StagedExecutorBase):
@@ -893,16 +957,28 @@ class TrainPipelineExecutor(_StagedExecutorBase):
                  microbatch_inputs: Sequence[str], num_microbatches: int,
                  lr: float = 1e-2, regs: Optional[Sequence[int]] = None,
                  fn_wrap: Optional[Callable] = None, optimizer=None,
-                 runtime: str = "threads", recipe=None):
+                 runtime: str = "threads", recipe=None,
+                 snapshot_dir: Optional[str] = None, snapshot_every: int = 1,
+                 faults=None):
         from repro.core.lowering import OptimizerSpec
 
         super().__init__(tstaged, microbatch_inputs, num_microbatches, regs,
-                         fn_wrap, runtime=runtime, recipe=recipe)
+                         fn_wrap, runtime=runtime, recipe=recipe,
+                         faults=faults)
         self.tstaged = tstaged
         self.lr = lr
         self.optimizer = optimizer if optimizer is not None else (
             tstaged.optimizer if tstaged.optimizer is not None
             else OptimizerSpec.sgd(lr))
+        if snapshot_every < 1:
+            raise ValueError(
+                f"snapshot_every must be >= 1, got {snapshot_every}")
+        self._snapshot = None
+        if snapshot_dir is not None:
+            from repro.runtime.snapshot import SnapshotSpec
+            self._snapshot = SnapshotSpec(str(snapshot_dir))
+        self.snapshot_every = snapshot_every
+        self._state_dirty = False
         self.params: Dict[str, Any] = {}
         self.load_params(params)
         # driver-side mirror of the per-stage optimizer state (None entries
@@ -920,7 +996,8 @@ class TrainPipelineExecutor(_StagedExecutorBase):
                                 lr=self.lr, regs=self.regs,
                                 fn_wrap=self.fn_wrap,
                                 optimizer=self.optimizer,
-                                staged=self.tstaged, recipe=self.recipe)
+                                staged=self.tstaged, recipe=self.recipe,
+                                snapshot=self._snapshot)
 
     def load_params(self, params: Dict[str, Any]) -> None:
         """Replace the executor-owned params (e.g. a checkpoint restore).
@@ -937,6 +1014,34 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         self.params = {n: params[n] for n in self.tstaged.param_names}
         self._params_dirty = True
 
+    def load_state(self, params: Optional[Dict[str, Any]] = None,
+                   opt_state=None, step: Optional[int] = None) -> None:
+        """Restore a full training state (the kill-and-resume seam).
+
+        Extends :meth:`load_params` with the two pieces a restart must not
+        lose: ``opt_state`` — a *merged* :class:`repro.optim.adamw
+        .AdamWState` over all params (e.g. from
+        :func:`repro.runtime.snapshot.load_snapshot`), split per stage by
+        THIS executor's partition, so a snapshot restores onto a different
+        stage cut — and ``step``, the optimizer-step counter the lr
+        schedule is indexed by. The restored moments ride the next step's
+        ``ctx`` into each stage's worker, replacing the worker-resident
+        state before its ``state{s}`` actor fires.
+        """
+        if params is not None:
+            self.load_params(params)
+        if opt_state is not None:
+            if not self.optimizer.stateful:
+                raise ValueError(
+                    "opt_state given but the optimizer is stateless "
+                    f"({self.optimizer.kind})")
+            self.opt_states = self.optimizer.split_state(
+                opt_state, {st.index: st.param_names
+                            for st in self.tstaged.stages if st.param_names})
+            self._state_dirty = True
+        if step is not None:
+            self.step_count = int(step)
+
     @property
     def peak_inflight_activations(self) -> int:
         """Peak forward registers in use across stages in the last step —
@@ -950,16 +1055,8 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         """The per-stage optimizer states merged into one
         :class:`repro.optim.adamw.AdamWState` over all params (None for a
         stateless optimizer)."""
-        if not self.optimizer.stateful:
-            return None
-        from repro.optim.adamw import AdamWState
-        states = [self.opt_states[s] for s in sorted(self.opt_states)]
-        mu: Dict[str, Any] = {}
-        nu: Dict[str, Any] = {}
-        for st in states:
-            mu.update(st.mu)
-            nu.update(st.nu)
-        return AdamWState(states[0].step, mu, nu)
+        return self.optimizer.merge_states(
+            [self.opt_states[s] for s in sorted(self.opt_states)])
 
     def step(self, data_inputs: Dict[str, Any], timeout: float = 300.0):
         """Run one training step over the current params.
@@ -982,6 +1079,9 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         ctx: Dict[str, Any] = {
             "data": split_microbatches(data_inputs, self.microbatch_inputs,
                                        self.num_microbatches)}
+        snap_step = self.step_count + 1   # the state after THIS step lands
+        write = (self._snapshot is not None
+                 and snap_step % self.snapshot_every == 0)
         for st in self.tstaged.stages:
             bound = {n: data_inputs[n] for n in st.input_names
                      if n in graph_inputs and n not in mb
@@ -990,11 +1090,21 @@ class TrainPipelineExecutor(_StagedExecutorBase):
                 bound.update({n: self.params[n] for n in st.param_names})
             ctx[f"f{st.index}"] = bound
             if st.param_names:
-                ctx[f"opt{st.index}"] = self.step_count
+                if self._state_dirty:
+                    ctx[f"opt{st.index}"] = {
+                        "step": self.step_count,
+                        "load_state": self.opt_states[st.index]}
+                else:
+                    ctx[f"opt{st.index}"] = self.step_count
+                if self._snapshot is not None:
+                    ctx[f"snap{st.index}"] = {"step": snap_step,
+                                              "write": write}
         outs = self._run_rt(ctx, None, timeout)
         self._params_dirty = False
+        self._state_dirty = False
 
-        collect = _train_collect_names(self.tstaged)
+        collect = _train_collect_names(self.tstaged,
+                                       snapshot=self._snapshot is not None)
         # the loss-bearing backward actor fires in version order in one
         # worker, so the collected loss stream is microbatch-ordered
         loss_payloads = outs[collect[0]]
@@ -1010,6 +1120,8 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         grads: Dict[str, Any] = {}
         norm = None
         for name in collect[1:]:
+            if name.startswith("snap"):
+                continue
             (opt_out,) = outs[name]        # optimizer fired exactly once
             s = int(name[len("opt"):])
             grads.update(opt_out["grads"])
@@ -1019,8 +1131,34 @@ class TrainPipelineExecutor(_StagedExecutorBase):
             if "norm" in opt_out:
                 norm = opt_out["norm"]
         self.last_grad_norm = norm
+        if write:
+            self._finalize_snapshot(outs, snap_step)
         self.step_count += 1
         return loss, grads, dict(self.params)
+
+    def _finalize_snapshot(self, outs, snap_step: int) -> None:
+        """Write the snapshot MANIFEST — only after every stage's snap actor
+        delivered a write receipt for this step. The MANIFEST is the
+        completeness marker: a step killed mid-write leaves stage dirs
+        without one, and restore ignores them."""
+        from repro.runtime.snapshot import write_manifest
+
+        receipts = []
+        for st in self.tstaged.stages:
+            if not st.param_names:
+                continue
+            (r,) = outs[f"snap{st.index}"]
+            if not r["written"] or int(r["step"]) != snap_step:
+                raise RuntimeError(
+                    f"snapshot receipt mismatch from stage {st.index}: {r} "
+                    f"(expected written step {snap_step})")
+            receipts.append(int(r["stage"]))
+        write_manifest(
+            self._snapshot.dir, snap_step, receipts,
+            meta={"param_names": list(self.tstaged.param_names),
+                  "stateful": self.optimizer.stateful,
+                  "optimizer": self.optimizer.kind,
+                  "num_stages": self.tstaged.num_stages})
 
 
 # ---------------------------------------------------------------------------

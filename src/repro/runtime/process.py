@@ -47,7 +47,7 @@ from repro.runtime.messages import Req, node_of
 
 
 def _worker_main(node: int, builder, collect_names, inbox, driver_q,
-                 peer_queues) -> None:
+                 peer_queues, faults=None) -> None:
     """Entry point of one node's worker process (module-level: spawn pickles
     the function by reference)."""
     state = {"epoch": 0, "sent": 0, "recv": 0}
@@ -63,6 +63,13 @@ def _worker_main(node: int, builder, collect_names, inbox, driver_q,
                              if s.node == node})
         engine = _LocalEngine(specs, local_keys=local_keys)
         engine.collect_names = set(collect_names)
+        if faults is not None:
+            from repro.runtime.chaos import FaultInjector
+            # each worker routes only the messages its own actors originate,
+            # so every fault still applies exactly once graph-wide; a
+            # KillWorker here hard-exits this process (os._exit) and the
+            # driver's liveness probe turns that into a WorkerError
+            engine.fault_injector = FaultInjector(faults, process_mode=True)
         sent_lock = threading.Lock()
 
         def send_remote(msg):
@@ -113,12 +120,14 @@ def _worker_main(node: int, builder, collect_names, inbox, driver_q,
                 held = [(ee, m) for ee, m in held if ee > e]
                 for m in replay:
                     state["recv"] += 1
-                    engine.post(m)
+                    engine.deliver(m)
             elif kind == "msg":
                 _, e, m = item
                 if e == state["epoch"]:
                     state["recv"] += 1
-                    engine.post(m)
+                    # deliver, not post: the message was already fault-routed
+                    # at the sending worker's engine
+                    engine.deliver(m)
                 elif e > state["epoch"]:
                     held.append((e, m))
                 # e < epoch: stale message from an abandoned epoch — drop
@@ -157,7 +166,7 @@ class ProcessRuntime(Runtime):
     """
 
     def __init__(self, builder: SpecBuilder, collect_outputs_of=None,
-                 start_timeout: float = 180.0):
+                 start_timeout: float = 180.0, faults=None):
         try:
             pickle.dumps(builder)
         except Exception as exc:
@@ -192,7 +201,8 @@ class ProcessRuntime(Runtime):
             p = ctx.Process(
                 target=_worker_main,
                 args=(n, builder, tuple(self._collect_names),
-                      self._node_qs[n], self._driver_q, self._node_qs),
+                      self._node_qs[n], self._driver_q, self._node_qs,
+                      faults),
                 daemon=True)
             # spawn snapshots os.environ at start(): inject the per-worker
             # XLA setup here, before the child's first (jax) import
@@ -409,6 +419,13 @@ class ProcessRuntime(Runtime):
                 p.terminate()
         for p in self._procs.values():
             p.join(timeout=1.0)
+        # SIGKILL stragglers: a worker wedged in native code (or mid-error)
+        # can survive terminate(), and an errored runtime must never leak
+        # processes past close()
+        for p in self._procs.values():
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=1.0)
 
     def __del__(self):  # best-effort; daemon workers die with the parent anyway
         try:

@@ -85,6 +85,9 @@ class _LocalEngine:
         self.on_quiescence: Optional[Callable[[bool], None]] = None
         self.on_error: Optional[Callable[[BaseException, Tuple[int, int]], None]] = None
         self.collect_names: Set[str] = set()
+        # optional chaos layer (repro.runtime.chaos.FaultInjector): consulted
+        # before every local fire and for every outgoing message
+        self.fault_injector = None
         # epoch state
         self._epoch = 0
         self._mailboxes: Dict[Tuple[int, int], queue.Queue] = {}
@@ -155,7 +158,44 @@ class _LocalEngine:
 
     # -- message routing ---------------------------------------------------------
     def post(self, msg) -> None:
+        """Route an *originating* message (the sending engine's side).
+
+        With a fault injector attached the message may be delayed,
+        duplicated or dropped here; :meth:`deliver` is the fault-free path
+        used for messages arriving from another process (already routed at
+        their sender)."""
+        inj = self.fault_injector
+        if inj is None:
+            self.deliver(msg)
+            return
+        src = self.by_id[msg.src].spec.name
+        dst = self.by_id[msg.dst].spec.name
+        epoch, boxes = self._epoch, self._mailboxes
+        for m, delay in inj.route(msg, src, dst):
+            if delay > 0:
+                t = threading.Timer(delay, self._deliver_late,
+                                    args=(m, epoch, boxes))
+                t.daemon = True
+                t.start()
+            else:
+                self.deliver(m)
+
+    def deliver(self, msg) -> None:
         box = self._mailboxes.get((node_of(msg.dst), thread_of(msg.dst)))
+        if box is not None:
+            box.put(msg)
+        else:
+            self.send_remote(msg)
+
+    def _deliver_late(self, msg, epoch: int, boxes) -> None:
+        """Timer callback for a delayed message. A pending delayed Req/Ack
+        keeps its producer's register referenced, so the epoch cannot
+        conclude before delivery; if the epoch was nevertheless abandoned
+        (timeout/error), deliver into the *captured* mailbox table — a
+        stale epoch's boxes are unreachable garbage, never poison."""
+        if self._epoch != epoch or self._stopping:
+            return
+        box = boxes.get((node_of(msg.dst), thread_of(msg.dst)))
         if box is not None:
             box.put(msg)
         else:
@@ -206,6 +246,10 @@ class _LocalEngine:
             for actor in self.actors_on[key]:
                 while (actor.ready() and not self._stopping
                        and self._epoch == epoch):
+                    if self.fault_injector is not None:
+                        # may raise WorkerKilled (threads) or hard-exit the
+                        # process (a KillWorker fault)
+                        self.fault_injector.before_fire(actor.spec.name)
                     start = time.perf_counter() - self._t0
                     out, acks, reg_id = actor.fire()
                     # wall-clock action history mirrors the simulator's, so
@@ -248,8 +292,11 @@ class ThreadedRuntime(Runtime):
     """
 
     def __init__(self, specs: Sequence[ActorSpec],
-                 collect_outputs_of=None):
+                 collect_outputs_of=None, faults=None):
         self._engine = _LocalEngine(specs)
+        if faults is not None:
+            from repro.runtime.chaos import FaultInjector
+            self._engine.fault_injector = FaultInjector(faults)
         self.by_name = self._engine.by_name
         self.by_id = self._engine.by_id
         self._collect_single = (collect_outputs_of is None

@@ -139,6 +139,41 @@ class TestProcessRuntime:
                 rt.run(timeout=3.0)
 
 
+class TestProcessRuntimeClose:
+    """close() must be idempotent and must never leak worker processes —
+    not after clean runs, not after a worker crash, not after a hard kill
+    (the elastic-training story depends on a dead session being fully
+    reclaimable before the resume session spawns its own workers)."""
+
+    def test_close_is_idempotent(self):
+        rt = ProcessRuntime(ChainBuilder(n=2))
+        rt.run(timeout=60.0)
+        procs = list(rt._procs.values())
+        rt.close()
+        rt.close()    # second close: no-op, no error
+        assert all(not p.is_alive() for p in procs)
+
+    def test_no_leak_after_worker_crash(self):
+        rt = ProcessRuntime(CrashBuilder())
+        procs = list(rt._procs.values())
+        with pytest.raises(WorkerError):
+            rt.run(timeout=60.0)
+        # the raise path already closed the runtime; nothing may survive
+        assert all(not p.is_alive() for p in procs)
+        rt.close()    # and closing an already-failed runtime stays safe
+
+    def test_no_leak_after_fault_injected_kill(self):
+        from repro.runtime.chaos import FaultPlan, KillWorker
+
+        rt = ProcessRuntime(ChainBuilder(n=4),
+                            faults=FaultPlan([KillWorker("mid", fire=2)]))
+        procs = list(rt._procs.values())
+        with pytest.raises(WorkerError, match="exit code 57"):
+            rt.run(timeout=60.0)
+        assert all(not p.is_alive() for p in procs)
+        rt.close()
+
+
 class TestProcessRuntimeGuards:
     def test_unpicklable_builder_rejected_up_front(self):
         """A closure builder fails fast on the driver with an actionable

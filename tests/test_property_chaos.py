@@ -1,0 +1,102 @@
+"""Property: message-level chaos never changes training bits.
+
+The actor protocol's correctness story (§4.2) is that counters — not
+arrival order — decide when an actor acts: a Req is consumed only when its
+version is next for its channel, duplicates are dropped by the per-channel
+resequencer, and back-pressure comes from register quotas. So randomly
+delaying and duplicating Reqs on real edges of a 1F1B AdamW pipeline must
+be invisible in the numbers: same losses, same final params, bit for bit.
+
+(DropAck is deliberately excluded: a dropped ack is a *detected* fault —
+the producer's register is never freed, the run wedges and times out — not
+a reordering the protocol must absorb. test_fault_tolerance covers the
+detected-fault path via kills.)
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro import api
+from repro.core.graph import LogicalGraph
+from repro.core.lowering import OptimizerSpec
+from repro.core.placement import Placement
+from repro.runtime.chaos import DelayEdge, DuplicateReq, FaultPlan
+
+B, W, S, M, STEPS = 8, 8, 2, 2, 3
+
+#: real Req edges of the 2-stage train pipeline (fwd chain, bwd chain,
+#: accumulated-grad hand-off to the optimizers)
+EDGES = [("f0", "f1"), ("f1", "b1"), ("b1", "b0"),
+         ("b0", "opt0"), ("b1", "opt1")]
+
+
+def _graph():
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (B, W))
+    labels = g.input("labels", (B,), dtype="int32")
+    for i in range(S):
+        w = g.input(f"w{i}", (W, W))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < S - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+    return g
+
+
+_CACHE = {}
+
+
+def _reference():
+    if "ref" not in _CACHE:
+        rng = np.random.default_rng(0)
+        params = {f"w{i}": (rng.normal(size=(W, W)) * 0.1).astype(np.float32)
+                  for i in range(S)}
+        data = {"x": rng.normal(size=(B, W)).astype(np.float32),
+                "labels": rng.integers(0, W, size=(B,)).astype(np.int32)}
+        opt = OptimizerSpec.adamw(lr=1e-3, grad_clip=1.0)
+        sess = api.compile(_graph(), mode="train", stages=S,
+                           params=dict(params), optimizer=opt,
+                           num_microbatches=M)
+        losses = [float(sess.step(**data).loss) for _ in range(STEPS)]
+        sess.close()
+        _CACHE["ref"] = (params, data, opt, losses, sess.params)
+    return _CACHE["ref"]
+
+
+_edges = st.sampled_from(EDGES)
+
+_delays = st.builds(
+    lambda e, secs, ver: DelayEdge(e[0], e[1], seconds=secs, version=ver),
+    _edges, st.floats(0.005, 0.04),
+    st.one_of(st.none(), st.integers(0, M * STEPS - 1)))
+
+_dups = st.builds(
+    lambda e, ver: DuplicateReq(e[0], e[1], version=ver),
+    _edges, st.integers(0, M * STEPS - 1))
+
+_plans = st.lists(st.one_of(_delays, _dups), min_size=1, max_size=3).map(
+    lambda fs: FaultPlan(tuple(fs)))
+
+
+class TestChaosInvariance:
+    @settings(max_examples=8, deadline=None)
+    @given(plan=_plans)
+    def test_delay_duplicate_never_change_bits(self, plan):
+        params, data, opt, ref_losses, ref_params = _reference()
+        sess = api.compile(_graph(), mode="train", stages=S,
+                           params=dict(params), optimizer=opt,
+                           num_microbatches=M, faults=plan)
+        try:
+            losses = [float(sess.step(**data).loss) for _ in range(STEPS)]
+            final = sess.params
+        finally:
+            sess.close()
+        assert losses == ref_losses, plan
+        for n, v in ref_params.items():
+            assert np.array_equal(np.asarray(final[n]), np.asarray(v)), \
+                (n, plan)
