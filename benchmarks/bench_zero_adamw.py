@@ -1,0 +1,179 @@
+"""§6.4 + Fig 14: the mixed-precision ZeRO optimizer stream, DP=2.
+
+Four pipeline stages on disjoint 2-device meshes, bf16 compute over fp32
+masters (``precision="bf16"``, static power-of-two loss scale). Two
+configurations of the same 1F1B AdamW pipeline are compared:
+
+* **dense** — every device holds the full fp32 masters + Adam moments
+  (replicated across the DP=2 group): 12 bytes per parameter element.
+* **zero** — the opt actors hold flat ``(2, 1, chunk)`` fp32 master/moment
+  shards (§6.4, ZeRO-DP from SBP) and emit gathered bf16 weights with the
+  Fig-14 cast placed before the gather: 6 bytes per element per device.
+
+Gates (all hard failures):
+
+* bitwise identity: the zero pipeline's losses, params and merged moments
+  equal the dense pipeline's over the gated steps (the flat shard is pure
+  layout; AdamW is elementwise);
+* memory: per-device optimizer-state bytes reduced by >= 1.8x;
+* speed: the zero pipeline's best 1F1B step makespan within 1.15x of the
+  dense pipeline's.
+
+Writes ``BENCH_zero_adamw.json`` — see docs/benchmarks.md for the schema.
+Set ``BENCH_SMOKE=1`` for a single repetition (CI); the gates still run.
+"""
+import json
+import os
+import pathlib
+import sys
+import time
+
+STAGES = 4
+MICROBATCHES = 8
+BATCH = 64
+WIDTH = 128
+DP = 2
+FWD_LATENCY = 0.02              # emulated per-stage device time (seconds)
+BWD_LATENCY = 0.04
+GRAD_CLIP = 1.0
+LOSS_SCALE = 2.0 ** 12
+BYTES_RATIO_GATE = 1.8
+TIME_RATIO_GATE = 1.15
+
+
+def lr_schedule(step: int) -> float:
+    return 1e-3 * (0.9 ** step)
+
+
+def main():
+    sys.path.insert(0, "src")
+    import numpy as np
+
+    from benchmarks._util import emit
+    from repro import api
+    from repro.core.graph import LogicalGraph
+    from repro.core.lowering import OptimizerSpec
+    from repro.core.placement import Placement
+
+    import jax
+
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    reps = 1 if smoke else 3
+
+    devs = jax.devices()
+    if len(devs) < STAGES * DP:
+        raise RuntimeError(f"need {STAGES * DP} devices, have {len(devs)}")
+
+    placement = Placement(("data",), (DP,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (BATCH, WIDTH), sbp="S(0)")
+    labels = g.input("labels", (BATCH,), dtype="int32", sbp="S(0)")
+    for i in range(STAGES):
+        w = g.input(f"w{i}", (WIDTH, WIDTH))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < STAGES - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+
+    rng = np.random.default_rng(0)
+    params = {f"w{i}": (rng.normal(size=(WIDTH, WIDTH)) * 0.5
+                        ).astype(np.float32) for i in range(STAGES)}
+    data = {"x": rng.normal(size=(BATCH, WIDTH)).astype(np.float32),
+            "labels": rng.integers(0, WIDTH, size=(BATCH,)).astype(np.int32)}
+    stage_meshes = [placement.to_mesh(devices=devs[DP * s:DP * s + DP])
+                    for s in range(STAGES)]
+
+    def compile_pipeline(zero, fn_wrap=None):
+        return api.compile(
+            g, mode="train", backend="actors", stages=STAGES,
+            params=dict(params),
+            optimizer=OptimizerSpec.adamw(lr=lr_schedule,
+                                          grad_clip=GRAD_CLIP),
+            num_microbatches=MICROBATCHES, stage_meshes=stage_meshes,
+            zero=zero, precision="bf16", loss_scale=LOSS_SCALE,
+            fn_wrap=fn_wrap)
+
+    # -- correctness gate: zero vs dense, bitwise, plus byte accounting ------
+    dense = compile_pipeline(zero=False)
+    zero = compile_pipeline(zero=True)
+    try:
+        api.assert_sessions_match(zero, dense, data, steps=2)
+        st = zero.opt_state
+        assert int(st.step) == 2
+        assert all(float(np.abs(np.asarray(st.mu[n])).sum()) > 0
+                   for n in params)
+        grad_norm = float(zero.executor.last_grad_norm)
+        dense_bytes = sum(dense.executor.opt_state_bytes().values())
+        zero_bytes = sum(zero.executor.opt_state_bytes().values())
+    finally:
+        dense.close()
+        zero.close()
+    bytes_ratio = dense_bytes / zero_bytes
+
+    def with_latency(kind, stage_index, fn):
+        delay = FWD_LATENCY if kind == "fwd" else BWD_LATENCY
+
+        def body(*args):
+            out = fn(*args)
+            time.sleep(delay)
+            return out
+        return body
+
+    def measure(zero_flag):
+        sess = compile_pipeline(zero=zero_flag, fn_wrap=with_latency)
+        try:
+            best = None
+            for _ in range(reps):
+                sess.step(**data)
+                span = sess.last_makespan
+                best = span if best is None else min(best, span)
+        finally:
+            sess.close()
+        return best
+
+    dense_time = measure(False)
+    zero_time = measure(True)
+    time_ratio = zero_time / dense_time
+
+    emit("zero_adamw/dense_bf16_1f1b", dense_time * 1e6,
+         f"S={STAGES};M={MICROBATCHES};dp={DP};"
+         f"opt_bytes_per_dev={dense_bytes}")
+    emit("zero_adamw/zero_bf16_1f1b", zero_time * 1e6,
+         f"S={STAGES};M={MICROBATCHES};dp={DP};"
+         f"opt_bytes_per_dev={zero_bytes};bytes_ratio={bytes_ratio:.2f};"
+         f"time_ratio={time_ratio:.3f};grad_norm={grad_norm:.1f}")
+
+    out = {
+        "stages": STAGES, "microbatches": MICROBATCHES, "dp": DP,
+        "fwd_latency_s": FWD_LATENCY, "bwd_latency_s": BWD_LATENCY,
+        "precision": "bf16", "loss_scale": LOSS_SCALE,
+        "optimizer": "adamw", "grad_clip": GRAD_CLIP,
+        "lr_schedule": "1e-3 * 0.9**step",
+        "opt_state_bytes_per_device_dense": dense_bytes,
+        "opt_state_bytes_per_device_zero": zero_bytes,
+        "bytes_ratio": bytes_ratio,
+        "dense_pipelined_s": dense_time,
+        "zero_pipelined_s": zero_time,
+        "time_ratio": time_ratio,
+        "grad_norm_step1": grad_norm,
+        "gates": {"bytes_ratio_min": BYTES_RATIO_GATE,
+                  "time_ratio_max": TIME_RATIO_GATE,
+                  "bitwise_vs_dense": True},
+    }
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "BENCH_zero_adamw.json")
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    if bytes_ratio < BYTES_RATIO_GATE:
+        raise RuntimeError(
+            f"per-device optimizer-state bytes only {bytes_ratio:.2f}x "
+            f"below dense (gate {BYTES_RATIO_GATE}x): "
+            f"{dense_bytes} -> {zero_bytes}")
+    if time_ratio > TIME_RATIO_GATE:
+        raise RuntimeError(
+            f"zero pipeline {time_ratio:.3f}x the dense step time "
+            f"(gate {TIME_RATIO_GATE}x): {dense_time:.3f}s vs "
+            f"{zero_time:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,10 @@ subprocesses with placeholder host devices (the main process keeps 1 device).
   §3.3+§4.3-> bench_1f1b_adamw            (subprocess, 8 devices; also
               writes BENCH_1f1b_adamw.json: stateful AdamW + cross-stage
               grad-clipping pipeline, serialized vs 1F1B)
+  §6.4+Fig14-> bench_zero_adamw           (subprocess, 8 devices; also
+              writes BENCH_zero_adamw.json: mixed-precision ZeRO stream at
+              DP=2 vs dense bf16 AdamW — bitwise-gated, per-device
+              optimizer-state bytes >= 1.8x down, step time within 1.15x)
   §4.3 serve-> bench_serve_pipeline       (subprocess; also writes
               BENCH_serve_pipeline.json: serialized single-request decode
               vs pipelined continuous batching, tok/s)
@@ -38,8 +42,9 @@ import traceback
 
 
 BENCH_WRITERS = ("bench_actor_pipeline", "bench_1f1b_train",
-                 "bench_1f1b_adamw", "bench_serve_pipeline",
-                 "bench_process_pipeline", "bench_snapshot_overhead")
+                 "bench_1f1b_adamw", "bench_zero_adamw",
+                 "bench_serve_pipeline", "bench_process_pipeline",
+                 "bench_snapshot_overhead")
 
 
 def main() -> None:

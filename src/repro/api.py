@@ -44,10 +44,10 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.graph import (LogicalGraph, StagePartition, partition_stages)
-from repro.core.lowering import (OptimizerSpec, lower_plan, lower_serve_stages,
-                                 lower_stages, lower_train_plan,
-                                 lower_train_stages, reassemble_sinks,
-                                 split_microbatches)
+from repro.core.lowering import (OptimizerSpec, PrecisionPolicy, lower_plan,
+                                 lower_serve_stages, lower_stages,
+                                 lower_train_plan, lower_train_stages,
+                                 reassemble_sinks, split_microbatches)
 from repro.core.planner import Plan, plan as plan_sbp
 from repro.runtime.base import RUNTIME_KINDS
 from repro.runtime.pipeline import (ActorPipelineExecutor, DecodeWork,
@@ -149,27 +149,72 @@ class _MonolithicTrainEngine:
         self.graph = graph
         self.params = _canonical_params(graph, params)
         self.param_names = tuple(self.params)
+        self.optimizer = optimizer
+        self._scaling = optimizer.loss_scaling is not None
         self.vg = lower_train_plan(graph, plan, mesh, list(self.param_names),
-                                   loss=loss)
+                                   loss=loss, scaled=self._scaling)
         self.input_names = [t.name for t in graph.inputs]
         self.microbatch_inputs = list(microbatch_inputs)
         self.num_microbatches = num_microbatches
-        self.optimizer = optimizer
-        self.opt_state = None
+        self._opt_state = None
         self.step_count = 0
         self.last_grad_norm = None
         self.last_makespan: Optional[float] = None
+        # loss-scaling mirror — same trajectory as the pipelined scale actor
+        self.loss_scale = (optimizer.initial_scale()
+                           if self._scaling else None)
+        self.scale_good_steps = 0
+        self.last_skipped = False
+        self.last_scale = None
+        # mixed precision: fp32 masters (flat ZeRO shards or dense) are the
+        # optimizer's view; ``_compute`` is the cast copy fwd/bwd see
+        self._masters = None
+        self._compute = None
+        self._refresh_masters()
+
+    def _refresh_masters(self) -> None:
+        import jax.numpy as jnp
+
+        opt = self.optimizer
+        if not opt.mixed_precision:
+            self._masters = self._compute = None
+            return
+        if opt.zero:
+            self._masters = opt.shard_masters(self.params)
+            self._compute = opt.gather_params(self._masters,
+                                              dtype=opt.compute_dtype)
+            # re-canonicalize params through the same shard/gather (bitwise
+            # identity for fp32 inputs: pad-then-truncate is pure layout)
+            self.params = opt.gather_params(self._masters)
+        else:
+            self._masters = {n: jnp.asarray(v).astype(jnp.float32)
+                             for n, v in self.params.items()}
+            self._compute = {n: v.astype(jnp.dtype(opt.compute_dtype))
+                             for n, v in self._masters.items()}
+            self.params = dict(self._masters)
+
+    @property
+    def opt_state(self):
+        """Merged (full-tensor) optimizer state — flat ZeRO shards are
+        gathered so the surface is partition- and zero-agnostic."""
+        st = self._opt_state
+        if st is None or not self.optimizer.zero:
+            return st
+        return self.optimizer.merge_states([st])
 
     def load_params(self, params: Dict[str, Any]) -> None:
         missing = [n for n in self.param_names if n not in params]
         if missing:
             raise ValueError(f"missing params: {missing}")
         self.params = {n: params[n] for n in self.param_names}
+        self._refresh_masters()
 
     def load_state(self, params: Optional[Dict[str, Any]] = None,
                    opt_state=None, step: Optional[int] = None) -> None:
         """Restore full training state (e.g. from a snapshot): params,
-        optimizer state, and the step counter the lr schedule indexes."""
+        optimizer state, and the step counter the lr schedule indexes.
+        ``opt_state`` is always the merged full-tensor form; a ZeRO
+        optimizer re-shards it flat on arrival."""
         if params is not None:
             self.load_params(params)
         if opt_state is not None:
@@ -177,13 +222,19 @@ class _MonolithicTrainEngine:
                 raise ValueError(
                     "opt_state= for a stateless optimizer "
                     f"({self.optimizer.kind})")
-            self.opt_state = opt_state
+            if self.optimizer.zero:
+                opt_state = self.optimizer.split_state(
+                    opt_state, {0: list(self.param_names)})[0]
+            self._opt_state = opt_state
         if step is not None:
             self.step_count = int(step)
 
     def step(self, data_inputs: Dict[str, Any], timeout: float = 0.0):
+        import numpy as np
+
         import jax.numpy as jnp
 
+        from repro.core.lowering import loss_scale_update
         from repro.optim.adamw import (clip_scale, global_norm_from_partials,
                                        scale_grad, sqnorm_partials)
 
@@ -195,35 +246,93 @@ class _MonolithicTrainEngine:
         chunks = split_microbatches(data_inputs, self.microbatch_inputs,
                                     self.num_microbatches)
         mb = set(self.microbatch_inputs)
+        opt = self.optimizer
+        compute = self._compute if self._compute is not None else self.params
         loss_total, grads = None, None
         for chunk in chunks:
             vals = [chunk[n] if n in mb
-                    else (self.params[n] if n in self.params
+                    else (compute[n] if n in compute
                           else data_inputs[n])
                     for n in self.input_names]
-            loss_vec, g = self.vg(*vals)
+            if self._scaling:
+                loss_vec, g = self.vg(np.float32(self.loss_scale), *vals)
+            else:
+                loss_vec, g = self.vg(*vals)
             ls = jnp.sum(loss_vec)
             loss_total = ls if loss_total is None else loss_total + ls
             g32 = [x.astype(jnp.float32) for x in g]
             grads = (g32 if grads is None
                      else [a + b for a, b in zip(grads, g32)])
         gdict = dict(zip(self.param_names, grads))
-        opt = self.optimizer
-        if opt.grad_clip:
+        if self._scaling:
+            # unscale ONCE after accumulation (exact for power-of-two
+            # scales) — same op order as the pipelined acc actors
+            inv = np.float32(np.float32(1.0) / np.float32(self.loss_scale))
+            gdict = {n: scale_grad(g, inv) for n, g in gdict.items()}
+        need_norm = bool(opt.grad_clip) or opt.dynamic_scaling
+        if need_norm:
             norm = global_norm_from_partials(sqnorm_partials(gdict),
                                              self.param_names)
-            scale = clip_scale(norm, opt.grad_clip)
-            gdict = {n: scale_grad(g, scale) for n, g in gdict.items()}
+            cscale = clip_scale(norm, opt.grad_clip)
+            gdict = {n: scale_grad(g, cscale) for n, g in gdict.items()}
             self.last_grad_norm = norm
-        if opt.stateful and self.opt_state is None:
-            self.opt_state = opt.init_state(dict(self.params))
-        new_params, self.opt_state = opt.update(
-            dict(self.params), gdict, self.opt_state,
-            opt.lr_at(self.step_count))
-        self.params = new_params
+        self.last_scale = self.loss_scale
+        if opt.dynamic_scaling:
+            finite = bool(np.isfinite(np.float32(norm)))
+            skip, nxt, good = loss_scale_update(
+                opt.precision, self.loss_scale, self.scale_good_steps,
+                finite)
+            self.loss_scale, self.scale_good_steps = nxt, good
+            self.last_skipped = skip
+            if skip:
+                # non-finite grads: leave params/masters/state untouched —
+                # the same no-op the pipelined opt actors perform
+                self.last_makespan = time.perf_counter() - t0
+                return loss_total, {}, dict(self.params)
+        else:
+            self.last_skipped = False
+        masters = self._masters if self._masters is not None else dict(
+            self.params)
+        if opt.stateful and self._opt_state is None:
+            self._opt_state = opt.init_state(masters)
+        new_masters, self._opt_state = opt.update(
+            masters, gdict, self._opt_state, opt.lr_at(self.step_count))
+        if opt.mixed_precision:
+            self._masters = new_masters
+            if opt.zero:
+                self.params = opt.gather_params(new_masters)
+                self._compute = opt.gather_params(new_masters,
+                                                  dtype=opt.compute_dtype)
+            else:
+                self.params = dict(new_masters)
+                self._compute = {
+                    n: v.astype(jnp.dtype(opt.compute_dtype))
+                    for n, v in new_masters.items()}
+        else:
+            self.params = new_masters
         self.step_count += 1
         self.last_makespan = time.perf_counter() - t0
         return loss_total, gdict, dict(self.params)
+
+    def opt_state_bytes(self) -> Dict[int, int]:
+        """Monolithic counterpart of
+        :meth:`repro.runtime.pipeline.TrainPipelineExecutor.opt_state_bytes`:
+        one entry (stage 0) of per-device optimizer-held fp32 bytes."""
+        import numpy as np
+
+        opt = self.optimizer
+        zero_dp = opt.zero_dp if opt.zero else 1
+        total = 0
+        st = self._opt_state
+        if st is not None:
+            for tree in (st.mu, st.nu):
+                total += sum(int(np.asarray(v).nbytes)
+                             for v in tree.values())
+        if opt.mixed_precision:
+            for n in self.param_names:
+                nelem = int(np.asarray(self.params[n]).size)
+                total += -(-nelem // zero_dp) * zero_dp * 4
+        return {0: total // zero_dp}
 
 
 class Session:
@@ -298,6 +407,13 @@ class Session:
     def last_makespan(self) -> Optional[float]:
         return self._engine.last_makespan
 
+    @property
+    def last_edge_bytes(self) -> Dict[Any, int]:
+        """Per-edge serialized payload bytes from the last step/run —
+        ``{(producer, consumer): bytes}`` from the actor runtime; empty for
+        monolithic engines (one program, no edges)."""
+        return dict(getattr(self._engine, "last_edge_bytes", None) or {})
+
     def load_params(self, params: Dict[str, Any]) -> None:
         """Replace the session-owned params (e.g. checkpoint restore);
         optimizer state is untouched."""
@@ -362,6 +478,12 @@ class Session:
             "grad_norm": self._engine.last_grad_norm,
             "makespan": self._engine.last_makespan,
         }
+        if (self.optimizer is not None
+                and self.optimizer.loss_scaling is not None):
+            ls = getattr(self._engine, "last_scale", None)
+            metrics["loss_scale"] = None if ls is None else float(ls)
+            metrics["skipped"] = bool(getattr(self._engine, "last_skipped",
+                                              False))
         if self.backend == "actors":
             metrics["peak_inflight"] = self._engine.peak_inflight_activations
         # history holds host floats only, so a long training loop never
@@ -390,6 +512,25 @@ class Session:
                 f"optimizer: {opt.kind} (grad_clip={opt.grad_clip}, "
                 f"stateful={opt.stateful})" if opt is not None
                 else "optimizer: none")
+            if opt is not None and opt.mixed_precision:
+                scaling = opt.loss_scaling
+                lines.append(
+                    f"precision: compute={opt.compute_dtype} "
+                    f"masters=float32 "
+                    f"loss_scale={'off' if scaling is None else scaling}")
+            if opt is not None and opt.zero:
+                lines.append(
+                    f"zero: dp={opt.zero_dp} — flat (dp, 1, chunk) fp32 "
+                    "master/moment shards held by the opt actors")
+            bytes_fn = getattr(self._engine, "opt_state_bytes", None)
+            if opt is not None and opt.stateful and bytes_fn is not None:
+                per = bytes_fn()
+                if per:
+                    per_s = " ".join(f"stage{s}={per[s]}"
+                                     for s in sorted(per))
+                    lines.append(
+                        "optimizer-state bytes/device: "
+                        f"{per_s} (total {sum(per.values())})")
         lines.append(self.plan.describe())
         if self.partition is not None:
             lines.append(self.partition.describe(g, regs=self.regs))
@@ -781,15 +922,76 @@ def _resolve_regs(regs, partition: StagePartition, num_microbatches: int,
     return regs, None
 
 
+def _fold_precision_options(graph, optimizer: OptimizerSpec,
+                            params: Dict[str, Any], *, zero, precision,
+                            loss_scale) -> OptimizerSpec:
+    """Resolve ``compile()``'s ``zero=``/``precision=``/``loss_scale=`` into
+    the :class:`OptimizerSpec` fields the lowering and runtime layers read
+    (``zero``/``zero_dp``/``zero_shapes``/``precision``). The spec's own
+    ``__post_init__`` re-validates the folded result (zero requires AdamW;
+    loss scaling requires bf16 compute over fp32 masters)."""
+    import numpy as np
+
+    if not zero and precision is None and loss_scale is None:
+        return optimizer
+    policy = precision
+    if isinstance(policy, str):
+        aliases = {"bf16": "bfloat16", "bfloat16": "bfloat16",
+                   "fp32": "float32", "float32": "float32"}
+        if policy not in aliases:
+            raise ValueError(
+                f"unknown precision {policy!r}; expected 'bf16'/'bfloat16', "
+                "'fp32'/'float32', or a PrecisionPolicy")
+        policy = PrecisionPolicy(compute_dtype=aliases[policy],
+                                 loss_scale=loss_scale)
+    elif isinstance(policy, PrecisionPolicy):
+        if loss_scale is not None:
+            policy = dataclasses.replace(policy, loss_scale=loss_scale)
+    elif policy is not None:
+        raise ValueError(
+            f"precision= must be a dtype string or PrecisionPolicy, "
+            f"got {type(policy).__name__}")
+    elif loss_scale is not None:
+        raise ValueError(
+            "loss_scale= without precision= — loss scaling only exists to "
+            "keep bf16 cotangents representable; pass precision='bf16' "
+            "(fp32 compute never needs a scaled backward seed)")
+    zero_dp, zero_shapes = 1, None
+    if zero:
+        pl = graph.placement
+        sizes = dict(zip(pl.axis_names, pl.axis_sizes))
+        if "data" in sizes:
+            zero_dp = int(sizes["data"])
+        elif len(pl.axis_names) == 1:
+            # a sole placement axis doubles as the data axis
+            zero_dp = int(pl.axis_sizes[0])
+        else:
+            raise ValueError(
+                "zero=True requires a data axis to shard the optimizer "
+                "state over: name one placement axis 'data' (placement "
+                f"axes are {tuple(pl.axis_names)})")
+        zero_shapes = tuple(
+            (n, tuple(int(d) for d in np.shape(v)))
+            for n, v in params.items())
+    return dataclasses.replace(optimizer, zero=bool(zero), zero_dp=zero_dp,
+                               zero_shapes=zero_shapes, precision=policy)
+
+
 def _apply_restore(sess: "Session", restore) -> "Session":
     """Resolve ``compile(restore=<snapshot dir>)``: load the newest completed
-    snapshot and install it as the session's full training state."""
+    snapshot and install it as the session's full training state — including
+    the loss-scale trajectory when the snapshot recorded one."""
     if restore is None:
         return sess
     from repro.runtime.snapshot import load_snapshot
 
-    params, opt_state, step, _ = load_snapshot(str(restore))
+    params, opt_state, step, meta = load_snapshot(str(restore))
     sess.load_state(params=params, opt_state=opt_state, step=step)
+    eng = sess._engine
+    if (meta.get("loss_scale") is not None
+            and getattr(eng, "loss_scale", None) is not None):
+        eng.loss_scale = float(meta["loss_scale"])
+        eng.scale_good_steps = int(meta.get("scale_good_steps", 0))
     return sess
 
 
@@ -805,6 +1007,7 @@ def compile(graph, *, mode: str = "infer",
             fn_wrap=None, timeout: float = 300.0,
             snapshot_dir=None, snapshot_every: int = 1,
             restore=None, faults=None,
+            zero: bool = False, precision=None, loss_scale=None,
             num_groups: Optional[int] = None,
             group_size: Optional[int] = None,
             cache_len: Optional[int] = None,
@@ -879,6 +1082,25 @@ def compile(graph, *, mode: str = "infer",
       :class:`repro.runtime.chaos.FaultPlan` injected into the runtime —
       kill a named actor at its Nth fire, delay/duplicate a Req, drop an
       ack. The fault-tolerance tests drive kill-and-resume through this.
+    * ``zero`` (train only): shard the optimizer's fp32 master params and
+      AdamW moments across the placement's data axis as flat
+      ``(dp, 1, chunk)`` tensors (§6.4, ZeRO-DP from SBP) — the opt actors'
+      persistent register stream holds the shards; the forward sees gathered
+      weights cast to the compute dtype (the Fig-14 ``cast`` placed *before*
+      the gather, halving wire cost). Requires an AdamW optimizer and a data
+      axis (an axis named ``"data"``, or a 1-d placement). Bit-identical to
+      the dense path.
+    * ``precision`` (train only): ``"bf16"``/``"bfloat16"`` runs
+      forward/backward in bfloat16 over fp32 master params (cotangents and
+      gradient accumulation stay fp32); ``"fp32"``/``"float32"`` is the
+      default full-precision path; or pass a
+      :class:`~repro.core.lowering.PrecisionPolicy` directly.
+    * ``loss_scale`` (train only, requires ``precision="bf16"``): a float
+      scales the loss backward seed statically (unscaled once after fp32
+      accumulation — exact for powers of two); ``"dynamic"`` adds the
+      ``scale`` actor riding the norm actor's stream: non-finite grad norms
+      skip the update and back the scale off, sustained finite steps grow
+      it.
 
     The monolithic backend accepts but does not use the schedule hints
     ``partition``/``stages``/``regs`` (so one kwargs dict can sweep both
@@ -900,6 +1122,12 @@ def compile(graph, *, mode: str = "infer",
             "to choose)")
     if runtime is None and backend == "actors":
         runtime = "threads"
+    if mode != "train" and (zero or precision is not None
+                            or loss_scale is not None):
+        raise ValueError(
+            "zero=/precision=/loss_scale= are only meaningful for "
+            "mode='train' (they shape the optimizer's master/moment state "
+            "and the backward seed; nothing is updated in other modes)")
     if mode != "train":
         train_only = {"snapshot_dir": snapshot_dir, "restore": restore,
                       "faults": faults}
@@ -974,6 +1202,9 @@ def compile(graph, *, mode: str = "infer",
         params = _canonical_params(graph, params)
         if optimizer is None:
             optimizer = OptimizerSpec.sgd(lr)
+        optimizer = _fold_precision_options(graph, optimizer, params,
+                                            zero=zero, precision=precision,
+                                            loss_scale=loss_scale)
 
     if plan is None:
         plan = plan_sbp(graph)

@@ -470,6 +470,60 @@ def sgd_update(w, g, lr):
 
 
 @dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Mixed-precision policy for a training session (paper Fig 14, §6.4).
+
+    ``compute_dtype`` is what fwd/bwd see: params are cast at the
+    forward-stage boundary (the Fig-14 ``cast`` op — one cast per step, so a
+    sharded master crosses the wire at compute width), while the optimizer
+    keeps fp32 *masters* and fp32 moments. ``loss_scale`` is ``None`` (off),
+    a static float (the backward seed is ``scale`` instead of ones;
+    accumulated grads are unscaled by ``1/scale`` before the norm), or
+    ``"dynamic"``: start at ``init_scale``, multiply by ``backoff_factor``
+    and skip the update when the grad norm goes non-finite, multiply by
+    ``growth_factor`` after ``growth_interval`` consecutive finite steps.
+    Masters are always fp32 — that is what makes bf16 compute lossless to
+    round-trip (every bf16 value is exactly representable in fp32).
+    """
+
+    compute_dtype: str = "bfloat16"       # "float32" | "bfloat16"
+    loss_scale: Any = None                # None | float | "dynamic"
+    init_scale: float = 2.0 ** 15         # dynamic mode's starting scale
+    growth_interval: int = 2000           # finite steps before scale grows
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+
+    def __post_init__(self):
+        if self.compute_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"unsupported compute_dtype {self.compute_dtype!r} "
+                "(use 'float32' or 'bfloat16')")
+        ls = self.loss_scale
+        if ls is not None and ls != "dynamic":
+            if not isinstance(ls, (int, float)) or float(ls) <= 0:
+                raise ValueError(
+                    f"loss_scale must be None, a positive number, or "
+                    f"'dynamic'; got {ls!r}")
+        if self.growth_interval < 1:
+            raise ValueError("growth_interval must be >= 1")
+
+
+def loss_scale_update(policy: PrecisionPolicy, scale: float, good_steps: int,
+                      grads_finite: bool) -> Tuple[bool, float, int]:
+    """One dynamic-loss-scale transition: ``(skip, next_scale, next_good)``.
+
+    Shared by the pipelined ``scale`` actor and the monolithic engine so the
+    scale trajectories (and skip decisions) are identical on every backend.
+    """
+    if not grads_finite:
+        return True, float(scale) * float(policy.backoff_factor), 0
+    good = int(good_steps) + 1
+    if good >= int(policy.growth_interval):
+        return False, float(scale) * float(policy.growth_factor), 0
+    return False, float(scale), good
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerSpec:
     """Pluggable optimizer for staged training programs (SGD or AdamW).
 
@@ -481,6 +535,15 @@ class OptimizerSpec:
     expressed as an actor) and broadcasts the clip scale back to every
     ``opt{s}``. AdamW carries persistent :class:`repro.optim.adamw.AdamWState`
     (step count, mu, nu) per stage — the second register stream.
+
+    ``zero=True`` (AdamW only) shards that stream ZeRO-style (paper §6.4):
+    the optimizer holds flat ``(dp, 1, chunk)`` fp32 master/moment shards
+    (:mod:`repro.optim.zero`) instead of dense params + ``AdamWState``, and
+    ``update`` takes/returns masters in that layout. ``zero_dp`` is the
+    data-axis fold, ``zero_shapes`` the original param shapes the gather
+    restores (``api.compile`` records both). ``precision`` adds a
+    :class:`PrecisionPolicy` on top — bf16 compute params gathered from fp32
+    masters each step, with optional loss scaling.
     """
 
     kind: str = "sgd"                     # "sgd" | "adamw"
@@ -490,10 +553,27 @@ class OptimizerSpec:
     eps: float = 1e-8
     weight_decay: float = 0.1
     grad_clip: float = 0.0                # 0 disables global-norm clipping
+    zero: bool = False                    # ZeRO-shard masters + moments
+    zero_dp: int = 1                      # data-axis fold of the flat shards
+    zero_shapes: Any = None               # ((name, shape), ...) for gathers
+    precision: Optional[PrecisionPolicy] = None
 
     def __post_init__(self):
         if self.kind not in ("sgd", "adamw"):
             raise ValueError(f"unknown optimizer kind {self.kind!r}")
+        if self.zero and self.kind != "adamw":
+            raise ValueError(
+                "zero=True shards AdamW state; it requires kind='adamw'")
+        if self.zero and self.zero_dp < 1:
+            raise ValueError(f"zero_dp must be >= 1, got {self.zero_dp}")
+        if self.precision is not None and not isinstance(self.precision,
+                                                         PrecisionPolicy):
+            raise ValueError("precision must be a PrecisionPolicy")
+        if (self.precision is not None and self.precision.loss_scale is not None
+                and self.precision.compute_dtype == "float32"):
+            raise ValueError(
+                "loss_scale requires compute_dtype='bfloat16' (fp32 compute "
+                "has nothing to rescue from underflow)")
 
     @classmethod
     def sgd(cls, lr: Any = 1e-2, grad_clip: float = 0.0) -> "OptimizerSpec":
@@ -513,10 +593,76 @@ class OptimizerSpec:
     def lr_at(self, step: int) -> float:
         return float(self.lr(step)) if callable(self.lr) else float(self.lr)
 
+    # -- mixed-precision / ZeRO accessors -----------------------------------
+
+    @property
+    def mixed_precision(self) -> bool:
+        """True when the optimizer holds explicit fp32 masters (a precision
+        policy is set, or ZeRO sharding is on)."""
+        return self.precision is not None or self.zero
+
+    @property
+    def compute_dtype(self) -> Optional[str]:
+        """The dtype fwd/bwd see params in, or None to keep the param dtype
+        as given (the legacy no-masters behavior)."""
+        if self.precision is not None:
+            return self.precision.compute_dtype
+        return "float32" if self.zero else None
+
+    @property
+    def loss_scaling(self) -> Any:
+        """None (off), a static float, or ``"dynamic"``."""
+        return None if self.precision is None else self.precision.loss_scale
+
+    @property
+    def dynamic_scaling(self) -> bool:
+        return self.loss_scaling == "dynamic"
+
+    def initial_scale(self) -> float:
+        ls = self.loss_scaling
+        if ls is None:
+            return 1.0
+        if ls == "dynamic":
+            return float(self.precision.init_scale)
+        return float(ls)
+
+    @property
+    def zero_shape_map(self) -> Dict[str, Tuple[int, ...]]:
+        """Param name -> original shape, for gathering flat ZeRO shards."""
+        if self.zero_shapes is None:
+            raise ValueError(
+                "OptimizerSpec.zero_shapes is unset; api.compile records the "
+                "param shapes when zero=True")
+        items = (self.zero_shapes.items()
+                 if isinstance(self.zero_shapes, dict) else self.zero_shapes)
+        return {n: tuple(int(d) for d in s) for n, s in items}
+
+    def shard_masters(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Full params -> flat fp32 ``(dp, 1, chunk)`` master shards."""
+        from repro.optim.zero import shard_flat
+        return {n: shard_flat(jnp.asarray(v), dp=self.zero_dp)
+                for n, v in params.items()}
+
+    def gather_params(self, masters: Dict[str, Any], dtype: str = "float32",
+                      shapes: Optional[Dict[str, Tuple[int, ...]]] = None):
+        """Flat master shards -> full params in ``dtype`` (the Fig-14 cast
+        happens *before* the reshape-gather, so a bf16 gather moves half the
+        bytes of an fp32 one)."""
+        from repro.optim.zero import gather_flat
+        shapes = self.zero_shape_map if shapes is None else shapes
+        return {n: gather_flat(m, shape=tuple(shapes[n]), dtype=dtype)
+                for n, m in masters.items()}
+
     def init_state(self, params: Dict[str, Any]):
-        """Fresh optimizer state for ``params`` (None for stateless SGD)."""
+        """Fresh optimizer state for ``params`` (None for stateless SGD).
+
+        With ``zero=True``, ``params`` are the *flat master shards* and the
+        returned state is a flat :class:`repro.optim.zero.ZeroState`."""
         if self.kind == "sgd":
             return None
+        if self.zero:
+            from repro.optim.zero import init_zero_flat
+            return init_zero_flat(dict(params))
         from repro.optim.adamw import init_adamw
         return init_adamw(dict(params))
 
@@ -534,6 +680,14 @@ class OptimizerSpec:
         if self.kind == "sgd":
             return {n: sgd_update(params[n], grads[n], lr_now)
                     for n in params}, None
+        if self.zero:
+            from repro.optim.zero import zero_stage_update
+            if state is None:
+                state = self.init_state(params)
+            return zero_stage_update(
+                params, grads, state, lr_now, dp=self.zero_dp,
+                beta1=self.beta1, beta2=self.beta2, eps=self.eps,
+                weight_decay=self.weight_decay)
         from repro.optim.adamw import AdamWState, adamw_param_update
         if state is None:
             state = self.init_state(params)
@@ -554,8 +708,25 @@ class OptimizerSpec:
         split to None entries."""
         if not self.stateful or state is None:
             return {s: None for s in stage_param_names}
-        from repro.optim.adamw import AdamWState
         out = {}
+        if self.zero:
+            # A merged state is always the *full* AdamWState (load_snapshot
+            # gathers shards on the host), so re-splitting is shape-agnostic:
+            # shard each stage's moments flat at this spec's dp fold.
+            from repro.optim.zero import ZeroState, shard_flat
+            for s, names in stage_param_names.items():
+                missing = [n for n in names if n not in state.mu]
+                if missing:
+                    raise ValueError(
+                        f"optimizer state missing moments for params {missing}")
+                out[s] = ZeroState(
+                    state.step,
+                    {n: shard_flat(state.mu[n], dp=self.zero_dp)
+                     for n in names},
+                    {n: shard_flat(state.nu[n], dp=self.zero_dp)
+                     for n in names})
+            return out
+        from repro.optim.adamw import AdamWState
         for s, names in stage_param_names.items():
             missing = [n for n in names if n not in state.mu]
             if missing:
@@ -573,12 +744,22 @@ class OptimizerSpec:
             return None
         from repro.optim.adamw import AdamWState
         states = [s for s in states if s is not None]
+        if not states:
+            return None
         mu: Dict[str, Any] = {}
         nu: Dict[str, Any] = {}
+        if self.zero:
+            # Flat per-stage ZeroStates gather back to a full AdamWState so
+            # the merged form is partition- and zero-agnostic.
+            shapes = self.zero_shape_map
+            for st in states:
+                mu.update(self.gather_params(st.mu, shapes=shapes))
+                nu.update(self.gather_params(st.nu, shapes=shapes))
+            return AdamWState(states[0].step, mu, nu)
         for st in states:
             mu.update(st.mu)
             nu.update(st.nu)
-        return AdamWState(states[0].step, mu, nu) if states else None
+        return AdamWState(states[0].step, mu, nu)
 
 
 def _zero_cot(v):
@@ -725,16 +906,22 @@ class TrainStageProgram:
 
     def output_cotangents(self, outputs: Dict[str, Any],
                           cotangents: Dict[str, Any],
-                          loss_name: str) -> Tuple:
+                          loss_name: str, loss_seed=None) -> Tuple:
         """Assemble the vjp seed for this stage: ones for the loss sink (the
         objective is the *sum* of the loss tensor over each microbatch),
         incoming cotangents for outputs consumed downstream, zeros for the
-        rest. Cross-mesh cotangents are transferred onto this stage's
-        devices first (the explicit backward cross-stage send)."""
+        rest. ``loss_seed`` overrides the ones-seed with a constant (the
+        loss-scale: seeding ``scale`` instead of 1 multiplies every cotangent
+        by it, which keeps bf16 grads out of the underflow range). Cross-mesh
+        cotangents are transferred onto this stage's devices first (the
+        explicit backward cross-stage send)."""
         seeds = []
         for name in self.output_names:
             if name == loss_name:
-                seeds.append(jnp.ones_like(outputs[name]))
+                if loss_seed is None:
+                    seeds.append(jnp.ones_like(outputs[name]))
+                else:
+                    seeds.append(jnp.full_like(outputs[name], loss_seed))
             elif name in cotangents:
                 v = cotangents[name]
                 if self.cot_shardings is not None and name in self.cot_shardings:
@@ -839,6 +1026,10 @@ class TrainStagedProgram:
             ls = jnp.sum(env[self.loss_name])
             loss_total = ls if loss_total is None else loss_total + ls
         opt = optimizer if optimizer is not None else self.optimizer
+        if opt is not None and (opt.zero or opt.precision is not None):
+            raise NotImplementedError(
+                "reference_step does not model zero/mixed precision; compare "
+                "against the api.compile monolithic backend instead")
         if opt is None:
             new_params = {n: self.opt_update(inputs[n], grads[n], lr)
                           for n in self.param_names}
@@ -862,7 +1053,7 @@ class TrainStagedProgram:
 
 
 def lower_train_plan(graph: LogicalGraph, plan: Plan, mesh, params,
-                     loss=None) -> Callable:
+                     loss=None, scaled: bool = False) -> Callable:
     """Monolithic training program — the reference the pipeline is checked
     against. Returns a jitted ``fn(*graph_input_values) -> (loss_vec, grads)``
     where ``loss_vec`` is the (unreduced) loss sink and ``grads`` holds
@@ -870,7 +1061,10 @@ def lower_train_plan(graph: LogicalGraph, plan: Plan, mesh, params,
 
     Differentiation seeds ``ones_like(loss_vec)`` exactly like the pipelined
     backward stages, so per-microbatch gradients are bit-identical to the
-    composed per-stage vjps.
+    composed per-stage vjps. With ``scaled=True`` the returned function takes
+    ``fn(loss_seed, *graph_input_values)`` and seeds ``full_like(loss_vec,
+    loss_seed)`` instead — the loss-scaling hook, matching the pipelined
+    :meth:`TrainStageProgram.output_cotangents` seed exactly.
     """
     loss_t = _resolve_loss(graph, loss)
     param_ts = _resolve_params(graph, params)
@@ -904,7 +1098,19 @@ def lower_train_plan(graph: LogicalGraph, plan: Plan, mesh, params,
         raw = vjp(jnp.ones_like(loss_vec))
         return loss_vec, tuple(raw[j] for j in perm)
 
-    return jax.jit(value_and_grad)
+    def value_and_grad_scaled(loss_seed, *all_ins):
+        diff_vals = [all_ins[i] for i in diff_idx]
+        nondiff_vals = [all_ins[i] for i in nondiff_idx]
+
+        def f(*dv):
+            return mapped(*_scatter_args(diff_idx, nondiff_idx, n_in, dv,
+                                         nondiff_vals))[loss_pos]
+
+        loss_vec, vjp = jax.vjp(f, *diff_vals)
+        raw = vjp(jnp.full_like(loss_vec, loss_seed))
+        return loss_vec, tuple(raw[j] for j in perm)
+
+    return jax.jit(value_and_grad_scaled if scaled else value_and_grad)
 
 
 def lower_train_stages(graph: LogicalGraph, plan: Plan,

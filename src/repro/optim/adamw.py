@@ -132,6 +132,23 @@ def scale_grad(g, scale):
     return _scale(g, scale)
 
 
+def adamw_math(p32, g32, m, v, step, lr, beta1, beta2, eps, weight_decay):
+    """The AdamW recurrence itself, fp32 in / fp32 out, traceable anywhere.
+
+    Every AdamW path in the repo — the dense per-tensor kernel below, the
+    flat ZeRO shard update (``optim/zero.py``), and the shard_map SPMD
+    updates — runs exactly this op sequence; one shared body is what keeps
+    dense vs. ZeRO vs. pipelined updates bit-identical (elementwise fp32 ops
+    are layout-invariant). Returns ``(new_p32, new_m, new_v)``."""
+    bc1 = 1.0 - beta1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - beta2 ** step.astype(jnp.float32)
+    m = beta1 * m + (1 - beta1) * g32
+    v = beta2 * v + (1 - beta2) * g32 * g32
+    new_p = p32 - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                        + weight_decay * p32)
+    return new_p, m, v
+
+
 @partial(jax.jit, static_argnames=("beta1", "beta2", "eps", "weight_decay"))
 def adamw_param_update(p, g, m, v, step, lr, *, beta1: float = 0.9,
                        beta2: float = 0.95, eps: float = 1e-8,
@@ -140,13 +157,6 @@ def adamw_param_update(p, g, m, v, step, lr, *, beta1: float = 0.9,
     ``step`` the *new* (1-based) step count, ``lr`` the schedule-resolved
     learning rate. All math in fp32; the returned param keeps ``p.dtype``.
     Returns ``(new_p, new_m, new_v)``."""
-    g = g.astype(jnp.float32)
-    bc1 = 1.0 - beta1 ** step.astype(jnp.float32)
-    bc2 = 1.0 - beta2 ** step.astype(jnp.float32)
-    m = beta1 * m + (1 - beta1) * g
-    v = beta2 * v + (1 - beta2) * g * g
-    mhat = m / bc1
-    vhat = v / bc2
-    p32 = p.astype(jnp.float32)
-    new_p = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+    new_p, m, v = adamw_math(p.astype(jnp.float32), g.astype(jnp.float32),
+                             m, v, step, lr, beta1, beta2, eps, weight_decay)
     return new_p.astype(p.dtype), m, v

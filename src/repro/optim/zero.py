@@ -22,13 +22,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.common import MeshPlan
-from repro.optim.adamw import AdamWConfig
+from repro.optim.adamw import AdamWConfig, adamw_math, adamw_param_update
 
 
 class ZeroState(NamedTuple):
@@ -153,6 +154,71 @@ def init_zero_state_local(masters_local, plan: MeshPlan) -> ZeroState:
 
 
 # ---------------------------------------------------------------------------
+# global flat-shard kernels (no shard_map) — the per-stage entry points the
+# pipelined opt actors and the monolithic train engine share. Same layout as
+# the shard_map kernels above, but over the *global* array: the whole
+# (dp, 1, chunk) flat master lives in one jax.Array (optionally committed to
+# a NamedSharding over the leading dp axis, in which case XLA inserts the
+# S(0)->B all-gather / its reduce-scatter transpose for free).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("dp",))
+def shard_flat(x, *, dp: int):
+    """Full tensor -> flat ``(dp, 1, chunk)`` fp32 shards, zero-padded.
+
+    The global-view dual of :func:`shard_master_local`. Padding stays exactly
+    zero through AdamW updates (0 moments, 0 grad, 0 weight-decay term), so
+    gather -> re-shard across different dp values is bitwise lossless.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    chunk = _chunk_size(flat.size, dp)
+    flat = jnp.pad(flat, (0, dp * chunk - flat.size))
+    return flat.reshape(dp, 1, chunk)
+
+
+@partial(jax.jit, static_argnames=("shape", "dtype"))
+def gather_flat(m, *, shape, dtype):
+    """Flat ``(dp, 1, chunk)`` shards -> full tensor in ``dtype``.
+
+    The cast happens *before* the reshape — Fig 14's ``cast`` op ahead of the
+    S(0)->B gather, so a sharded master crosses the wire at compute-dtype
+    width, not fp32.
+    """
+    flat = m.astype(jnp.dtype(dtype)).reshape(-1)
+    n = math.prod(shape) if shape else 1
+    return flat[:n].reshape(shape)
+
+
+def init_zero_flat(masters) -> ZeroState:
+    """Zero moments in the masters' flat (dp, 1, chunk) layout."""
+    mu = jax.tree.map(lambda m: jnp.zeros_like(m, jnp.float32), masters)
+    return ZeroState(jnp.zeros((), jnp.int32), mu, jax.tree.map(jnp.copy, mu))
+
+
+def zero_stage_update(masters: Dict[str, Any], grads: Dict[str, Any],
+                      state: ZeroState, lr, *, dp: int, beta1: float,
+                      beta2: float, eps: float, weight_decay: float):
+    """One optimizer stage's ZeRO AdamW step on flat masters.
+
+    ``masters``: ``{name: (dp, 1, chunk) fp32}``; ``grads``: ``{name:
+    full-shape pre-clipped fp32}``. Per-element math is
+    :func:`adamw_param_update` (via the shared ``adamw_math`` body), which is
+    elementwise and therefore layout-invariant — the flat update is bitwise
+    the dense update reshaped. Returns ``(new_masters, new ZeroState)``.
+    """
+    new_step = state.step + 1
+    new_m: Dict[str, Any] = {}
+    new_mu: Dict[str, Any] = {}
+    new_nu: Dict[str, Any] = {}
+    for n, m in masters.items():
+        gf = shard_flat(grads[n], dp=dp)
+        new_m[n], new_mu[n], new_nu[n] = adamw_param_update(
+            m, gf, state.mu[n], state.nu[n], new_step, lr,
+            beta1=beta1, beta2=beta2, eps=eps, weight_decay=weight_decay)
+    return new_m, ZeroState(new_step, new_mu, new_nu)
+
+
+# ---------------------------------------------------------------------------
 # gradient combine over the model axis for replicated leaves
 # ---------------------------------------------------------------------------
 
@@ -214,18 +280,12 @@ def zero_adamw_update(cfg: AdamWConfig, masters, grads_flat, state: ZeroState,
         if cfg.grad_clip else jnp.float32(1.0)
 
     step = state.step + 1
-    b1, b2 = cfg.beta1, cfg.beta2
-    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
-    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
     lr = cfg.lr * lr_scale
 
     def upd(p, g, m, v):
         g = g.astype(jnp.float32) * scale
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        out = p - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
-                        + cfg.weight_decay * p)
-        return out, m, v
+        return adamw_math(p, g, m, v, step, lr, cfg.beta1, cfg.beta2,
+                          cfg.eps, cfg.weight_decay)
 
     out = jax.tree.map(upd, masters, grads_flat, state.mu, state.nu)
     is3 = lambda t: isinstance(t, tuple) and len(t) == 3
@@ -262,18 +322,12 @@ def plain_dp_adamw_update(cfg: AdamWConfig, params, grads, state,
         if cfg.grad_clip else jnp.float32(1.0)
 
     step = state.step + 1
-    b1, b2 = cfg.beta1, cfg.beta2
-    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
-    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
     lr = cfg.lr * lr_scale
 
     def upd(p, g, m, v):
-        g = g * scale
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        pf = p.astype(jnp.float32)
-        new_p = pf - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
-                           + cfg.weight_decay * pf)
+        new_p, m, v = adamw_math(p.astype(jnp.float32), g * scale, m, v,
+                                 step, lr, cfg.beta1, cfg.beta2, cfg.eps,
+                                 cfg.weight_decay)
         return new_p.astype(p.dtype), m, v
 
     out = jax.tree.map(upd, params, grads, state.mu, state.nu)

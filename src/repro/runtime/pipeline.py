@@ -551,11 +551,13 @@ _VJP_KEY = "__vjp__"
 _GRADS_KEY = "__grads__"
 
 
-def _train_collect_names(tstaged, snapshot: bool = False) -> List[str]:
+def _train_collect_names(tstaged, snapshot: bool = False,
+                         dynamic: bool = False) -> List[str]:
     """The collect list shared by the builder and the executor: the
     loss-bearing backward actor first, then every ``opt{s}``, then (with
     snapshotting on) every ``snap{s}`` — the write receipts the driver
-    needs before it finalizes a snapshot's MANIFEST."""
+    needs before it finalizes a snapshot's MANIFEST — then (with dynamic
+    loss scaling) the ``scale`` actor, whose decision the driver mirrors."""
     produced_at = {n: st.index for st in tstaged.stages
                    for n in st.output_names}
     loss_stage = produced_at[tstaged.loss_name]
@@ -563,6 +565,8 @@ def _train_collect_names(tstaged, snapshot: bool = False) -> List[str]:
     names = [f"b{loss_stage}"] + [f"opt{s}" for s in param_stages]
     if snapshot:
         names += [f"snap{s}" for s in param_stages]
+    if dynamic and param_stages:
+        names.append("scale")
     return names
 
 
@@ -630,8 +634,9 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
     """
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
-    from repro.core.lowering import OptimizerSpec
+    from repro.core.lowering import OptimizerSpec, loss_scale_update
     from repro.optim.adamw import (clip_scale, global_norm_from_partials,
                                    scale_grad, sqnorm_partials)
 
@@ -648,7 +653,12 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
         tstaged.optimizer if tstaged.optimizer is not None
         else OptimizerSpec.sgd(lr))
     clip = bool(opt.grad_clip)
-    param_order = tstaged.param_names
+    mp = opt.mixed_precision           # fp32 masters live in the opt actor
+    compute_dtype = opt.compute_dtype  # what fwd/bwd see (None: keep as-is)
+    scaling = opt.loss_scaling is not None
+    dynamic = opt.dynamic_scaling
+    need_norm = clip or dynamic        # dynamic scaling needs the finiteness
+    param_order = tstaged.param_names  # check even with clipping off
     param_stages = [st.index for st in tstaged.stages if st.param_names]
 
     graph_inputs = set(tstaged.input_names)
@@ -682,7 +692,23 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
     specs: List[ActorSpec] = [_payload_source_spec("data", num_microbatches)]
 
     def make_fwd_fn(stage):
-        bound, shard_of, on_epoch = _stage_binding(stage)
+        bound, shard_of, base_on_epoch = _stage_binding(stage)
+        # mixed precision: driver-sent params are fp32; the worker stashes
+        # them for the opt actor (to (re)build its fp32 masters) and binds
+        # the compute-dtype copy — the paper's Fig-14 ``cast`` op, applied
+        # once per (re)bind at the forward-stage boundary
+        raw_cell: Dict[str, Any] = {}
+        pset = set(stage.param_names)
+
+        def on_epoch(raw):
+            base_on_epoch(raw)
+            if not (mp and raw):
+                return
+            cdt = jnp.dtype(compute_dtype)
+            for n in raw:
+                if n in pset:
+                    raw_cell[n] = bound[n]
+                    bound[n] = bound[n].astype(cdt)
 
         def run_fwd(payload):
             incoming = _place_incoming(stage.input_names, bound, shard_of,
@@ -694,15 +720,25 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
             carried.update(zip(stage.output_names, outs))
             carried[_VJP_KEY] = vjp
             return carried
-        return run_fwd, bound, on_epoch
+        return run_fwd, bound, raw_cell, on_epoch
 
     def make_bwd_fn(stage):
+        # the loss stage's backward seed: 1 normally, the loss scale when
+        # scaling is on (driver-sent via ctx so the worker and the driver
+        # mirror never disagree on the step's scale)
+        seed_cell = {"scale": None}
+
+        def on_epoch(v):
+            if v is not None:
+                seed_cell["scale"] = float(v["loss_seed"])
+
         def run_bwd(f_payload, b_payload=None):
             incoming = {} if b_payload is None else b_payload["cots"]
             grads, contrib = {}, {}
             if stage.bwd is not None:
                 seeds = stage.output_cotangents(f_payload, incoming,
-                                                loss_name)
+                                                loss_name,
+                                                loss_seed=seed_cell["scale"])
                 in_cots = stage.bwd(f_payload[_VJP_KEY], seeds)
                 in_cots = jax.block_until_ready(in_cots)
                 for n, c in zip(stage.diff_input_names, in_cots):
@@ -726,32 +762,41 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
                 # array, changing the f32 rounding vs the threaded path
                 out["loss"] = jnp.sum(f_payload[loss_name])
             return out
-        return run_bwd
+        return run_bwd, on_epoch
 
     def make_acc_fn():
         # per-microbatch gradients accumulate in fp32 (the optimizer kernels'
         # math dtype) no matter what dtype the backward emits (e.g. bf16);
-        # the accumulator is epoch-local state, reset by on_epoch
+        # the accumulator is epoch-local state, reset by on_epoch. With loss
+        # scaling on, the driver sends ``1/scale`` and the accumulator
+        # unscales ONCE on its final fire — before the squared-norm partials,
+        # so the norm (and the finiteness check behind dynamic scaling) is of
+        # the true gradients.
         state: Dict[str, Any] = {}
-        meta = {"fires": 0}
+        meta = {"fires": 0, "inv": None}
 
-        def on_epoch(_):
+        def on_epoch(v):
             state.clear()
             meta["fires"] = 0
+            meta["inv"] = None if v is None else v.get("inv_scale")
 
         def run_acc(b_payload):
             meta["fires"] += 1
             for n, g in b_payload[_GRADS_KEY].items():
                 g32 = g.astype(jnp.float32)
                 state[n] = state[n] + g32 if n in state else g32
+            final = meta["fires"] == num_microbatches
+            if final and meta["inv"] is not None:
+                for n in state:
+                    state[n] = scale_grad(state[n], meta["inv"])
             out = {_GRADS_KEY: dict(state)}
-            if clip and meta["fires"] == num_microbatches:
+            if need_norm and final:
                 # the stage-local P contribution to the global grad norm
                 out["sqnorms"] = sqnorm_partials(state)
             return out
         return run_acc, on_epoch
 
-    def make_opt_fn(stage, bound, state_cell):
+    def make_opt_fn(stage, bound, raw_cell, state_cell):
         pnames = stage.param_names
         meta = {"step": 0}
 
@@ -767,23 +812,56 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
             else:
                 meta["step"] = int(v)
 
+        def refresh_masters():
+            # (re)build the fp32 masters from the fp32 params the driver
+            # just sent (first step, load_params, or a snapshot restore) —
+            # sharded flat for ZeRO, dense fp32 otherwise. The register
+            # stream the opt actor owns from here on.
+            raw = {n: raw_cell[n] for n in pnames}
+            if opt.zero:
+                masters = opt.shard_masters(raw)
+            else:
+                masters = {n: v.astype(jnp.float32) for n, v in raw.items()}
+            state_cell["masters"] = masters
+            state_cell["shapes"] = {n: tuple(v.shape) for n, v in raw.items()}
+            raw_cell.clear()
+
         def run_opt(acc_payload, *rest):
             idx = 0
-            norm_payload = None
+            norm_payload = scale_payload = None
             state = None
-            if clip:
+            if need_norm:
                 norm_payload = rest[idx]
+                idx += 1
+            if dynamic:
+                scale_payload = rest[idx]
                 idx += 1
             if opt.stateful:
                 state = rest[idx]["state"]
                 idx += 1
+            if mp and raw_cell:
+                refresh_masters()
+            if scale_payload is not None and scale_payload["skip"]:
+                # non-finite grads under dynamic scaling: no update, no step
+                # advance — the register stream (masters/moments/bound
+                # params) is left exactly as it was
+                out = {"skipped": True,
+                       "scale": scale_payload["scale"],
+                       "next_scale": scale_payload["next_scale"],
+                       "good_steps": scale_payload["good_steps"]}
+                if norm_payload is not None:
+                    out["norm"] = norm_payload["norm"]
+                return out
             grads = acc_payload[_GRADS_KEY]
             if norm_payload is not None:
                 grads = {n: scale_grad(grads[n], norm_payload["scale"])
                          for n in pnames}
             else:
                 grads = {n: grads[n] for n in pnames}
-            params = {n: bound[n] for n in pnames}
+            if mp:
+                params = state_cell["masters"]
+            else:
+                params = {n: bound[n] for n in pnames}
             if opt.stateful and state is None:
                 # first step in this worker: fresh (zeroed) state — the
                 # same values the driver-side mirror starts from
@@ -795,12 +873,37 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
             # the stage's persistent state advances IN the worker: the next
             # epoch's forward reads the updated bound params, state{s} emits
             # the updated optimizer state
-            bound.update(new_params)
+            if mp:
+                shapes = state_cell["shapes"]
+                state_cell["masters"] = new_params
+                if opt.zero:
+                    # gather for next step's forward at compute width (the
+                    # Fig-14 cast BEFORE the gather: half the wire bytes)
+                    bound.update(opt.gather_params(
+                        new_params, dtype=compute_dtype, shapes=shapes))
+                    full = opt.gather_params(new_params, shapes=shapes)
+                else:
+                    bound.update({n: v.astype(jnp.dtype(compute_dtype))
+                                  for n, v in new_params.items()})
+                    full = new_params
+            else:
+                bound.update(new_params)
+                full = new_params
             if opt.stateful:
                 state_cell["state"] = new_state
-            out = {"params": new_params, "grads": grads}
+            # the driver mirror always sees full fp32 params; snap{s} (same
+            # node) additionally sees the raw shards via a private key
+            out = {"params": full, "grads": grads}
             if opt.stateful:
                 out["state"] = new_state
+            if opt.zero:
+                out["__zero__"] = {"masters": new_params, "state": new_state,
+                                   "shapes": state_cell["shapes"],
+                                   "dp": opt.zero_dp}
+            if scale_payload is not None:
+                out["scale"] = scale_payload["scale"]
+                out["next_scale"] = scale_payload["next_scale"]
+                out["good_steps"] = scale_payload["good_steps"]
             if norm_payload is not None:
                 out["norm"] = norm_payload["norm"]
             return out
@@ -819,19 +922,36 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
         def run_snap(opt_payload):
             from repro.runtime.snapshot import write_stage_snapshot
 
-            if cell["write"]:
-                write_stage_snapshot(
-                    snapshot.dir, cell["step"], stage.index,
-                    {n: opt_payload["params"][n] for n in stage.param_names},
-                    opt_state=opt_payload.get("state"))
+            write = cell["write"] and not opt_payload.get("skipped")
+            if write:
+                zero_meta = opt_payload.get("__zero__")
+                if zero_meta is not None:
+                    # ZeRO: persist the flat master/moment *shards* (the
+                    # "__zero__" key is a same-node contract — snap{s} lives
+                    # on the opt actor's node, so it sees the raw stream);
+                    # load_snapshot gathers them partition-agnostically
+                    write_stage_snapshot(
+                        snapshot.dir, cell["step"], stage.index,
+                        dict(zero_meta["masters"]),
+                        opt_state=zero_meta["state"],
+                        zero={"dp": zero_meta["dp"],
+                              "shapes": {n: list(s) for n, s in
+                                         zero_meta["shapes"].items()}})
+                else:
+                    write_stage_snapshot(
+                        snapshot.dir, cell["step"], stage.index,
+                        {n: opt_payload["params"][n]
+                         for n in stage.param_names},
+                        opt_state=opt_payload.get("state"))
             return {"stage": stage.index, "step": cell["step"],
-                    "written": cell["write"]}
+                    "written": write}
         return run_snap, on_epoch
 
-    collect = _train_collect_names(tstaged, snapshot=snapshot is not None)
+    collect = _train_collect_names(tstaged, snapshot=snapshot is not None,
+                                   dynamic=dynamic)
     for s, stage in enumerate(tstaged.stages):
-        fwd_fn, bound, fwd_on_epoch = make_fwd_fn(stage)
-        bwd_fn = make_bwd_fn(stage)
+        fwd_fn, bound, raw_cell, fwd_on_epoch = make_fwd_fn(stage)
+        bwd_fn, bwd_on_epoch = make_bwd_fn(stage)
         if fn_wrap is not None:
             fwd_fn = fn_wrap("fwd", s, fwd_fn)
             bwd_fn = fn_wrap("bwd", s, bwd_fn)
@@ -844,7 +964,9 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
             name=f"b{s}", fn=bwd_fn,
             inputs=(f"f{s}",) if s == S - 1 else (f"f{s}", f"b{s+1}"),
             out_regs=2, node=s + 1, thread=0,
-            max_fires=num_microbatches))
+            max_fires=num_microbatches,
+            on_epoch=bwd_on_epoch if (scaling and s == loss_stage)
+            else None))
         if stage.param_names:
             acc_fn, acc_on_epoch = make_acc_fn()
             specs.append(ActorSpec(
@@ -853,20 +975,25 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
                 max_fires=num_microbatches, emit_every=num_microbatches,
                 on_epoch=acc_on_epoch))
             opt_inputs = (f"acc{s}",)
-            if clip:
+            if need_norm:
                 opt_inputs += ("norm",)
-            state_cell: Dict[str, Any] = {"state": None}
+            if dynamic:
+                opt_inputs += ("scale",)
+            state_cell: Dict[str, Any] = {"state": None, "masters": None,
+                                          "shapes": None}
             if opt.stateful:
                 # the optimizer-state register stream: a source actor emits
-                # the worker-resident AdamWState; opt{s} consumes it next to
-                # the summed gradients and the broadcast clip scale
+                # the worker-resident AdamWState (flat ZeroState shards when
+                # zero=True); opt{s} consumes it next to the summed
+                # gradients and the broadcast clip scale
                 specs.append(ActorSpec(
                     name=f"state{s}",
                     fn=lambda _c=state_cell: {"state": _c["state"]},
                     inputs=(), out_regs=1, node=s + 1, thread=0,
                     max_fires=1))
                 opt_inputs += (f"state{s}",)
-            opt_fn, opt_on_epoch = make_opt_fn(stage, bound, state_cell)
+            opt_fn, opt_on_epoch = make_opt_fn(stage, bound, raw_cell,
+                                               state_cell)
             specs.append(ActorSpec(
                 name=f"opt{s}", fn=opt_fn,
                 inputs=opt_inputs, out_regs=1, node=s + 1, thread=0,
@@ -883,10 +1010,11 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
                     out_regs=1, node=s + 1, thread=1,
                     max_fires=1, on_epoch=snap_on_epoch))
 
-    if clip and param_stages:
+    if need_norm and param_stages:
         # cross-stage *sideways* communication on the actor protocol: sum the
         # per-stage squared-norm partials (P→B boxing as an actor) and
-        # broadcast the clip scale to every opt{s}
+        # broadcast the clip scale to every opt{s} (1.0 when clipping is off
+        # and the norm only feeds the dynamic-scaling finiteness check)
         def run_norm(*acc_payloads):
             partials = {}
             for pl in acc_payloads:
@@ -898,6 +1026,33 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
             name="norm", fn=run_norm,
             inputs=tuple(f"acc{s}" for s in param_stages),
             out_regs=1, node=0, thread=0, max_fires=1))
+
+    if dynamic and param_stages:
+        # dynamic loss scaling rides the norm actor's sideways P→B edge: one
+        # more actor inspects the true-gradient norm for finiteness and
+        # broadcasts the skip/backoff/growth decision to every opt{s}. The
+        # driver re-seeds the cell each step via ctx["scale"], so kills and
+        # restores never fork the scale trajectory.
+        sc_cell = {"scale": float(opt.initial_scale()), "good": 0}
+
+        def sc_on_epoch(v):
+            if v is not None:
+                sc_cell["scale"] = float(v["scale"])
+                sc_cell["good"] = int(v["good_steps"])
+
+        def run_scale(norm_payload):
+            finite = bool(np.isfinite(np.float32(norm_payload["norm"])))
+            skip, nxt, good = loss_scale_update(
+                opt.precision, sc_cell["scale"], sc_cell["good"], finite)
+            out = {"skip": skip, "scale": sc_cell["scale"],
+                   "next_scale": nxt, "good_steps": good}
+            sc_cell["scale"], sc_cell["good"] = nxt, good
+            return out
+
+        specs.append(ActorSpec(
+            name="scale", fn=run_scale, inputs=("norm",),
+            out_regs=1, node=0, thread=0, max_fires=1,
+            on_epoch=sc_on_epoch))
 
     return specs, collect
 
@@ -982,14 +1137,33 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         self.params: Dict[str, Any] = {}
         self.load_params(params)
         # driver-side mirror of the per-stage optimizer state (None entries
-        # for SGD); the workers initialize their own identical (zeroed) copy
-        # on the first step and send each update back on the opt payload
+        # for SGD; flat ZeroState shards when zero=True); the workers
+        # initialize their own identical (zeroed) copy on the first step and
+        # send each update back on the opt payload
         self.opt_states: Dict[int, Any] = {
-            st.index: self.optimizer.init_state(
-                {n: self.params[n] for n in st.param_names})
+            st.index: self._fresh_state(st)
             for st in tstaged.stages if st.param_names}
         self.step_count = 0
         self.last_grad_norm = None
+        # loss-scaling mirror: the driver owns the scale authority — it
+        # seeds the backward pass and the unscale factor via ctx every step
+        self._scaling = self.optimizer.loss_scaling is not None
+        self.loss_scale = (self.optimizer.initial_scale()
+                           if self._scaling else None)
+        self.scale_good_steps = 0
+        self.last_skipped = False
+        self.last_scale = None      # the scale the last step ran under
+        self._loss_stage = next(
+            st.index for st in tstaged.stages
+            if tstaged.loss_name in st.output_names)
+
+    def _fresh_state(self, st):
+        """A zeroed optimizer state for stage ``st`` — sharded flat when the
+        optimizer runs ZeRO, matching what the stage's worker builds."""
+        p = {n: self.params[n] for n in st.param_names}
+        if self.optimizer.zero:
+            p = self.optimizer.shard_masters(p)
+        return self.optimizer.init_state(p)
 
     def _make_builder(self):
         return TrainSpecBuilder(self.microbatch_inputs, self.num_microbatches,
@@ -1067,6 +1241,7 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         ``(loss, grads, params)``.
         """
         import jax.numpy as jnp
+        import numpy as np
 
         from repro.core.lowering import split_microbatches
 
@@ -1082,6 +1257,16 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         snap_step = self.step_count + 1   # the state after THIS step lands
         write = (self._snapshot is not None
                  and snap_step % self.snapshot_every == 0)
+        if self._scaling:
+            # seed the loss stage's backward with the scale, the acc actors
+            # with 1/scale (exact for power-of-two scales), and re-anchor
+            # the scale actor's cell at the driver's authoritative mirror
+            inv = np.float32(np.float32(1.0) / np.float32(self.loss_scale))
+            self.last_scale = self.loss_scale
+            ctx[f"b{self._loss_stage}"] = {"loss_seed": float(self.loss_scale)}
+            if self.optimizer.dynamic_scaling:
+                ctx["scale"] = {"scale": self.loss_scale,
+                                "good_steps": self.scale_good_steps}
         for st in self.tstaged.stages:
             bound = {n: data_inputs[n] for n in st.input_names
                      if n in graph_inputs and n not in mb
@@ -1090,6 +1275,8 @@ class TrainPipelineExecutor(_StagedExecutorBase):
                 bound.update({n: self.params[n] for n in st.param_names})
             ctx[f"f{st.index}"] = bound
             if st.param_names:
+                if self._scaling:
+                    ctx[f"acc{st.index}"] = {"inv_scale": inv}
                 if self._state_dirty:
                     ctx[f"opt{st.index}"] = {
                         "step": self.step_count,
@@ -1103,8 +1290,9 @@ class TrainPipelineExecutor(_StagedExecutorBase):
         self._params_dirty = False
         self._state_dirty = False
 
-        collect = _train_collect_names(self.tstaged,
-                                       snapshot=self._snapshot is not None)
+        collect = _train_collect_names(
+            self.tstaged, snapshot=self._snapshot is not None,
+            dynamic=self.optimizer.dynamic_scaling)
         # the loss-bearing backward actor fires in version order in one
         # worker, so the collected loss stream is microbatch-ordered
         loss_payloads = outs[collect[0]]
@@ -1119,21 +1307,32 @@ class TrainPipelineExecutor(_StagedExecutorBase):
 
         grads: Dict[str, Any] = {}
         norm = None
+        skipped = False
         for name in collect[1:]:
-            if name.startswith("snap"):
+            if not name.startswith("opt"):
                 continue
             (opt_out,) = outs[name]        # optimizer fired exactly once
             s = int(name[len("opt"):])
+            if "norm" in opt_out:
+                norm = opt_out["norm"]
+            if opt_out.get("skipped"):
+                skipped = True
+                continue
             grads.update(opt_out["grads"])
             self.params.update(opt_out["params"])
             if "state" in opt_out:
                 self.opt_states[s] = opt_out["state"]
-            if "norm" in opt_out:
-                norm = opt_out["norm"]
         self.last_grad_norm = norm
-        if write:
+        if self.optimizer.dynamic_scaling:
+            (sc,) = outs["scale"]
+            skipped = bool(sc["skip"])
+            self.loss_scale = float(sc["next_scale"])
+            self.scale_good_steps = int(sc["good_steps"])
+        self.last_skipped = skipped
+        if write and not skipped:
             self._finalize_snapshot(outs, snap_step)
-        self.step_count += 1
+        if not skipped:
+            self.step_count += 1
         return loss, grads, dict(self.params)
 
     def _finalize_snapshot(self, outs, snap_step: int) -> None:
@@ -1153,12 +1352,46 @@ class TrainPipelineExecutor(_StagedExecutorBase):
                     f"snapshot receipt mismatch from stage {st.index}: {r} "
                     f"(expected written step {snap_step})")
             receipts.append(int(r["stage"]))
-        write_manifest(
-            self._snapshot.dir, snap_step, receipts,
-            meta={"param_names": list(self.tstaged.param_names),
-                  "stateful": self.optimizer.stateful,
-                  "optimizer": self.optimizer.kind,
-                  "num_stages": self.tstaged.num_stages})
+        meta = {"param_names": list(self.tstaged.param_names),
+                "stateful": self.optimizer.stateful,
+                "optimizer": self.optimizer.kind,
+                "num_stages": self.tstaged.num_stages,
+                "zero": bool(self.optimizer.zero)}
+        if self._scaling:
+            # the scale to RESUME with (already advanced past this step)
+            meta["loss_scale"] = float(self.loss_scale)
+            meta["scale_good_steps"] = int(self.scale_good_steps)
+        write_manifest(self._snapshot.dir, snap_step, receipts, meta=meta)
+
+    def opt_state_bytes(self) -> Dict[int, int]:
+        """Per-stage bytes of worker-resident optimizer-held fp32 state.
+
+        With a mixed-precision optimizer this is masters + moments (3x the
+        fp32 param bytes dense, 3x/DP per device under ZeRO); for plain
+        AdamW it is the two moment tensors (the params themselves are the
+        model, not optimizer state). The DP-fold memory saving the ZeRO
+        stream buys is visible here without a profiler."""
+        import numpy as np
+
+        out: Dict[int, int] = {}
+        zero_dp = self.optimizer.zero_dp if self.optimizer.zero else 1
+        for st in self.tstaged.stages:
+            if not st.param_names:
+                continue
+            total = 0
+            state = self.opt_states.get(st.index)
+            if state is not None:
+                for tree in (state.mu, state.nu):
+                    total += sum(int(np.asarray(v).nbytes)
+                                 for v in tree.values())
+            if self.optimizer.mixed_precision:
+                # fp32 masters, flat-sharded under ZeRO
+                for n in st.param_names:
+                    nelem = int(np.asarray(self.params[n]).size)
+                    chunk = -(-nelem // zero_dp) * zero_dp
+                    total += chunk * 4
+            out[st.index] = total // zero_dp   # per-device share
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -69,20 +69,33 @@ def _sanitize(name: str) -> str:
 
 
 def write_stage_snapshot(root: str, step: int, stage: int,
-                         params: Dict[str, Any], opt_state=None) -> None:
+                         params: Dict[str, Any], opt_state=None,
+                         zero: Optional[Dict[str, Any]] = None) -> None:
     """One stage's slice of a snapshot, in the
     :mod:`repro.train.checkpoint` directory format. Runs inside the
-    ``snap{s}`` actor — off the schedule's hot path."""
+    ``snap{s}`` actor — off the schedule's hot path.
+
+    With ``zero`` set (``{"dp": int, "shapes": {name: [dims]}}``), the
+    arrays being written are the opt actor's *flat* ``(dp, 1, chunk)`` fp32
+    master/moment shards, persisted as-is — the zero metadata lets
+    :func:`_load_stage` gather them back to full tensors on the host, so
+    restore stays partition- and zero-agnostic."""
     from repro.train.checkpoint import save_checkpoint
 
     tree: Dict[str, Any] = {"params": dict(params)}
     if opt_state is not None:
         tree["opt"] = {"step": opt_state.step, "mu": dict(opt_state.mu),
                        "nu": dict(opt_state.nu)}
+    meta: Dict[str, Any] = {"stage": stage,
+                            "param_names": list(params),
+                            "stateful": opt_state is not None}
+    if zero is not None:
+        meta["zero"] = True
+        meta["zero_dp"] = int(zero["dp"])
+        meta["zero_shapes"] = {n: [int(d) for d in s]
+                               for n, s in zero["shapes"].items()}
     save_checkpoint(str(stage_dir(root, step, stage)), tree, step=step,
-                    meta={"stage": stage,
-                          "param_names": list(params),
-                          "stateful": opt_state is not None})
+                    meta=meta)
 
 
 def write_manifest(root: str, step: int, stages: List[int],
@@ -121,7 +134,12 @@ def latest_snapshot(root: str) -> Optional[int]:
 
 
 def _load_stage(d: pathlib.Path):
-    """Load one stage dir -> (params, mu, nu, opt_step or None)."""
+    """Load one stage dir -> (params, mu, nu, opt_step or None).
+
+    ZeRO stage dirs (``meta["zero"]``) hold flat ``(dp, 1, chunk)`` shards;
+    they are gathered back to full tensors here, on the host, with the same
+    reshape-then-truncate the jitted gather kernel performs — a pure layout
+    operation, so the round-trip is bitwise. The caller never sees shards."""
     import numpy as np
 
     manifest = json.loads((d / "manifest.json").read_text())
@@ -129,17 +147,27 @@ def _load_stage(d: pathlib.Path):
     names = meta.get("param_names", [])
     stateful = bool(meta.get("stateful"))
     leaves = manifest["leaves"]
+    zero_shapes = meta.get("zero_shapes") if meta.get("zero") else None
 
-    def load(key):
+    def load(key, shape=None):
         if key not in leaves:
             raise KeyError(f"stage snapshot {d} missing leaf {key!r}")
-        return np.load(d / leaves[key]["file"])
+        arr = np.load(d / leaves[key]["file"])
+        if shape is not None:
+            n = int(np.prod(shape)) if shape else 1
+            arr = arr.reshape(-1)[:n].reshape(shape)
+        return arr
 
-    params = {n: load(f"params.{_sanitize(n)}") for n in names}
+    def shape_of(n):
+        if zero_shapes is None:
+            return None
+        return tuple(int(d) for d in zero_shapes[n])
+
+    params = {n: load(f"params.{_sanitize(n)}", shape_of(n)) for n in names}
     if not stateful:
         return params, {}, {}, None
-    mu = {n: load(f"opt.mu.{_sanitize(n)}") for n in names}
-    nu = {n: load(f"opt.nu.{_sanitize(n)}") for n in names}
+    mu = {n: load(f"opt.mu.{_sanitize(n)}", shape_of(n)) for n in names}
+    nu = {n: load(f"opt.nu.{_sanitize(n)}", shape_of(n)) for n in names}
     return params, mu, nu, load("opt.step")
 
 

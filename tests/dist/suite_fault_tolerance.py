@@ -121,6 +121,73 @@ def elastic_kill_and_resume():
                            rtol=1e-4, atol=1e-7), nme
 
 
+def zero_mixed_precision_kill_and_resume():
+    """zero=True precision='bf16' at a real DP=2: the opt actors hold flat
+    ``(2, 1, chunk)`` fp32 master/moment shards; a 4-stage run killed
+    mid-step resumes from the sharded snapshot onto a 2-stage cut and
+    finishes the uninterrupted monolithic trajectory."""
+    placement = Placement(("data",), (2,), device_kind="cpu")
+    devs = jax.devices()
+    assert len(devs) >= 8
+    rng = np.random.default_rng(9)
+    params = {f"w{i}": (rng.normal(size=(WIDTH, WIDTH)) * 0.5
+                        ).astype(np.float32) for i in range(STAGES)}
+    data = {"x": rng.normal(size=(BATCH, WIDTH)).astype(np.float32),
+            "labels": rng.integers(0, WIDTH, (BATCH,)).astype(np.int32)}
+    kw = dict(mode="train", params=dict(params), optimizer=_opt(),
+              num_microbatches=MICROBATCHES, zero=True, precision="bf16",
+              loss_scale=2.0 ** 10)
+
+    ref = api.compile(_graph(placement), backend="monolithic",
+                      mesh=placement.to_mesh(devices=devs[:2]), **kw)
+    ref_losses = [float(ref.step(**data).loss) for _ in range(STEPS)]
+    assert ref.optimizer.zero_dp == 2     # the data axis folded into ZeRO
+
+    with tempfile.TemporaryDirectory() as d:
+        meshes4 = [placement.to_mesh(devices=devs[2 * s:2 * s + 2])
+                   for s in range(STAGES)]
+        sess = api.compile(
+            _graph(placement), stages=STAGES, stage_meshes=meshes4,
+            snapshot_dir=d,
+            faults=FaultPlan([KillWorker("opt2", fire=2)]), **kw)
+        losses = []
+        try:
+            for _ in range(STEPS):
+                losses.append(float(sess.step(**data).loss))
+            raise AssertionError("kill never triggered")
+        except WorkerError:
+            pass
+        finally:
+            sess.close()
+        n = latest_snapshot(d)
+        assert n == len(losses) == 1, (n, losses)
+
+        meshes2 = [placement.to_mesh(devices=devs[0:4:2]),
+                   placement.to_mesh(devices=devs[4:8:2])]
+        res = api.compile(_graph(placement), stages=2,
+                          stage_meshes=meshes2, restore=d, **kw)
+        assert res.step_count == n
+        assert int(res.opt_state.step) == n
+        losses += [float(res.step(**data).loss) for _ in range(STEPS - n)]
+        final_params, opt_state = res.params, res.opt_state
+        res.close()
+
+    for got, want in zip(losses, ref_losses):
+        assert np.allclose(got, want, rtol=1e-5), (losses, ref_losses)
+    rs = ref.opt_state
+    assert int(opt_state.step) == int(rs.step) == STEPS
+    for nme in params:
+        # masters and moments surface fp32 at logical shapes
+        assert np.asarray(final_params[nme]).dtype == np.float32
+        assert np.allclose(np.asarray(final_params[nme]),
+                           np.asarray(ref.params[nme]),
+                           rtol=1e-4, atol=1e-6), nme
+        assert np.allclose(np.asarray(opt_state.mu[nme]),
+                           np.asarray(rs.mu[nme]),
+                           rtol=1e-4, atol=1e-7), nme
+
+
 if __name__ == "__main__":
     elastic_kill_and_resume()
+    zero_mixed_precision_kill_and_resume()
     print("ALL-OK")
