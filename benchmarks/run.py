@@ -26,6 +26,10 @@ subprocesses with placeholder host devices (the main process keeps 1 device).
   snapshots -> bench_snapshot_overhead    (subprocess; also writes
               BENCH_snapshot_overhead.json: async snap{s} actors on vs
               off, overhead gated at 1.1x, bitwise + roundtrip gated)
+  paged    -> bench_paged_serve           (subprocess; also writes
+              BENCH_paged_serve.json: dense per-slot cache vs paged pool
+              on short-request serving — bitwise-gated, cache bytes
+              >= 2x down, tok/s within 1.15x)
 
 ``--smoke`` runs only the BENCH_*.json-writing benchmarks, one repetition
 each (BENCH_SMOKE=1), so CI keeps the recording code paths honest without
@@ -44,7 +48,7 @@ import traceback
 BENCH_WRITERS = ("bench_actor_pipeline", "bench_1f1b_train",
                  "bench_1f1b_adamw", "bench_zero_adamw",
                  "bench_serve_pipeline", "bench_process_pipeline",
-                 "bench_snapshot_overhead")
+                 "bench_snapshot_overhead", "bench_paged_serve")
 
 
 def main() -> None:

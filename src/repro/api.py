@@ -589,7 +589,10 @@ class ServeSession:
                  num_groups: int, group_size: int, cache_len: int,
                  max_prompt_len: int, max_new_tokens: int,
                  regs: Optional[List[int]], timeout: float = 300.0,
-                 runtime: Optional[str] = None):
+                 runtime: Optional[str] = None, cache: str = "dense",
+                 cache_spec=None, sampling=None,
+                 prefill_chunk: Optional[int] = None,
+                 share_prefix: bool = False):
         self.cfg = cfg
         self.mesh = mesh
         self.mode = "serve"
@@ -603,6 +606,11 @@ class ServeSession:
         self.max_new_tokens = max_new_tokens
         self.regs = regs
         self.timeout = timeout
+        self.cache = cache            # "dense" | "paged"
+        self.cache_spec = cache_spec  # PagedCacheSpec when paged
+        self.sampling = sampling      # SamplingSpec; None: greedy
+        self.prefill_chunk = prefill_chunk
+        self.share_prefix = share_prefix
         self.history: List[Dict[str, Any]] = []
         self.last_stats: Optional[Dict[str, Any]] = None
         self._engine = engine
@@ -645,12 +653,14 @@ class ServeSession:
     def generate(self, requests) -> List[Any]:
         """Run ``requests`` (ServeRequests or ``(tokens, max_new_tokens)``
         pairs) to completion with continuous batching; returns one int32
-        token array per request, in submission order."""
+        token array per request, in submission order. Round planning and
+        slot/page bookkeeping live in
+        :class:`repro.serve.admission.AdmissionScheduler`; this loop only
+        validates, drives the engine, and turns round results into
+        tokens."""
         import numpy as np
 
-        import jax.numpy as jnp
-
-        from repro.train.steps import greedy_from_logits
+        from repro.serve.admission import AdmissionScheduler
 
         reqs = self._normalize(requests)
         V = self.cfg.vocab_size
@@ -673,87 +683,77 @@ class ServeSession:
                     f"be in [1, {self.max_new_tokens}]")
             prompts.append(toks)
 
-        park = self.cache_len - 1              # never inside a live window
-        queue = list(range(len(reqs)))
-        slots: List[List[Optional[Dict[str, Any]]]] = [
-            [None] * self.group_size for _ in range(self.num_groups)]
-        outputs: List[List[int]] = [[] for _ in reqs]
-        admitted_mid_flight = 0
-        first_round = True
-        t0 = time.perf_counter()
+        pool = None
+        if self.cache == "paged":
+            from repro.serve.paged_cache import PagePool
 
-        while queue or any(st is not None for grp in slots for st in grp):
-            work: List[Any] = []
-            meta: List[Tuple] = []
-            for g in range(self.num_groups):
-                for b in range(self.group_size):
-                    if slots[g][b] is None and queue:
-                        r = queue.pop(0)
-                        toks = prompts[r]
-                        # natural length, no padding: right-padding would
-                        # poison recurrent SSM/conv state (attention caches
-                        # are positional, SSM state is not); each distinct
-                        # prompt length costs one jit specialization
-                        work.append(PrefillWork(
-                            group=g, slot=b, tokens=jnp.asarray(toks[None]),
-                            last_index=toks.size - 1))
-                        meta.append(("prefill", g, b))
-                        if not first_round:
-                            admitted_mid_flight += 1
-                        slots[g][b] = {"req": r, "pos": None, "tok": 0,
-                                       "remaining": reqs[r].max_new_tokens}
-                live = [b for b in range(self.group_size)
-                        if slots[g][b] is not None
-                        and slots[g][b]["pos"] is not None]
-                if live:
-                    tok = [slots[g][b]["tok"] if b in live else 0
-                           for b in range(self.group_size)]
-                    pos = [slots[g][b]["pos"] if b in live else park
-                           for b in range(self.group_size)]
-                    work.append(DecodeWork(
-                        group=g, tok=jnp.asarray(tok, jnp.int32),
-                        pos=jnp.asarray(pos, jnp.int32)))
-                    meta.append(("decode", g, live))
-            first_round = False
+            pool = PagePool(self.cache_spec)
+        sched = AdmissionScheduler(
+            prompts, [r.max_new_tokens for r in reqs],
+            num_groups=self.num_groups, group_size=self.group_size,
+            cache_len=self.cache_len, pool=pool,
+            prefill_chunk=self.prefill_chunk,
+            share_prefix=self.share_prefix)
+        t0 = time.perf_counter()
+        while not sched.done():
+            work, meta = sched.plan_round()
             results = self._engine.run_round(work, timeout=self.timeout)
-            for m, logits in zip(meta, results):
-                if m[0] == "prefill":
-                    _, g, b = m
-                    st = slots[g][b]
-                    tok = int(np.asarray(greedy_from_logits(logits, V))[0])
-                    outputs[st["req"]].append(tok)
-                    st["remaining"] -= 1
-                    if st["remaining"] == 0:
-                        slots[g][b] = None
-                    else:
-                        st["pos"] = prompts[st["req"]].size
-                        st["tok"] = tok
-                else:
-                    _, g, live = m
-                    toks = np.asarray(greedy_from_logits(logits, V))
-                    for b in live:
-                        st = slots[g][b]
-                        tok = int(toks[b])
-                        outputs[st["req"]].append(tok)
-                        st["remaining"] -= 1
-                        if st["remaining"] == 0:
-                            slots[g][b] = None
-                        else:
-                            st["pos"] += 1
-                            st["tok"] = tok
+            for m, res in zip(meta, results):
+                sched.absorb(m, self._pick_tokens(m, res))
             self.history.append({"kind": "round", "items": len(work),
                                  "makespan": self._engine.last_makespan})
 
         wall = time.perf_counter() - t0
-        total = sum(len(o) for o in outputs)
+        total = sum(len(o) for o in sched.outputs)
         self.last_stats = {
             "requests": len(reqs), "tokens": total,
             "rounds": self._engine.rounds, "wall_s": wall,
             "tok_per_s": total / wall if wall > 0 else float("inf"),
-            "admitted_mid_flight": admitted_mid_flight,
+            "admitted_mid_flight": sched.admitted_mid_flight,
         }
+        if pool is not None:
+            self.last_stats["peak_pages"] = pool.peak_pages
+            self.last_stats["shared_pages"] = sched.shared_pages
         self.history.append({"kind": "generate", **self.last_stats})
-        return [np.asarray(o, np.int32) for o in outputs]
+        return [np.asarray(o, np.int32) for o in sched.outputs]
+
+    def _pick_tokens(self, m, res):
+        """One round result -> the item's token vector (``None`` for a
+        non-final chunk). With sampling on, the engine already sampled in
+        the last stage; otherwise greedy the logits here, exactly the PR-5
+        driver-side path."""
+        import numpy as np
+
+        from repro.train.steps import greedy_from_logits
+
+        if self.sampling is not None:
+            toks = res["tokens"]
+            return None if toks is None else np.asarray(toks)
+        if m[0] == "chunk":
+            if not m[3]:
+                return None
+            res = res[-1]        # the chunk's last position feeds the head
+        return np.asarray(greedy_from_logits(res, self.cfg.vocab_size))
+
+    def cache_bytes(self) -> int:
+        """Analytic persistent cache bytes across all stages: the full
+        dense reservation (``num_groups`` group blocks) or the paged pool
+        (slabs + page table + cursors), from ``jax.eval_shape`` — nothing
+        is allocated."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.serve.paged_cache import dense_bytes, slab_bytes
+
+        total = 0
+        tok = jax.ShapeDtypeStruct((self.group_size,), jnp.int32)
+        for stage in self.sstaged.stages:
+            template = jax.eval_shape(stage.init_caches, tok)
+            if self.cache == "paged":
+                total += slab_bytes(template, self.cache_spec)
+            else:
+                total += dense_bytes(template, self.num_groups)
+        return total
 
     def describe(self) -> str:
         """Human-readable report of the compiled serving artifact."""
@@ -769,6 +769,21 @@ class ServeSession:
                  f"max_prompt_len={self.max_prompt_len}, "
                  f"max_new_tokens={self.max_new_tokens})",
                  self.sstaged.describe()]
+        if self.cache == "paged":
+            sp = self.cache_spec
+            extra = (f" prefill_chunk={self.prefill_chunk}"
+                     if self.prefill_chunk is not None else "")
+            lines.insert(3, f"cache: paged ({sp.num_pages} pages x "
+                            f"page_len={sp.page_len}, "
+                            f"{sp.pages_per_req} pages/request, "
+                            f"share_prefix={self.share_prefix}){extra}")
+        else:
+            lines.insert(3, "cache: dense (one group block per slot group)")
+        if self.sampling is not None:
+            sp = self.sampling
+            lines.insert(4, f"sampling: temperature={sp.temperature} "
+                            f"top_k={sp.top_k} top_p={sp.top_p} "
+                            f"seed={sp.seed}")
         if self.regs is not None:
             lines.append(f"register quotas: {self.regs}")
         return "\n".join(lines)
@@ -779,13 +794,96 @@ class ServeSession:
                 f"groups={self.num_groups}x{self.group_size})")
 
 
+def _serve_options(*, num_groups, group_size, cache_len, max_prompt_len,
+                   max_new_tokens, cache, page_len, num_pages, sampling,
+                   prefill_chunk, tp: int):
+    """Resolve defaults and validate every serve-only compile option at
+    compile time (a bad geometry must fail here, not as a shape error in
+    the middle of ``generate``). Returns ``(num_groups, group_size,
+    cache_len, max_prompt_len, max_new_tokens, cache, cache_spec)``."""
+    import math
+
+    num_groups = 2 if num_groups is None else num_groups
+    group_size = 2 if group_size is None else group_size
+    max_prompt_len = 64 if max_prompt_len is None else max_prompt_len
+    max_new_tokens = 64 if max_new_tokens is None else max_new_tokens
+    if num_groups < 1 or group_size < 1:
+        raise ValueError(f"num_groups={num_groups} and "
+                         f"group_size={group_size} must be >= 1")
+    if max_prompt_len < 1 or max_new_tokens < 1:
+        raise ValueError(f"max_prompt_len={max_prompt_len} and "
+                         f"max_new_tokens={max_new_tokens} must be >= 1")
+    if cache_len is None:
+        cache_len = max_prompt_len + max_new_tokens + 9
+        cache_len += -cache_len % tp
+    elif cache_len <= max_prompt_len + max_new_tokens:
+        # the last cache position is the parking slot for retired requests
+        raise ValueError(
+            f"cache_len={cache_len} must exceed max_prompt_len + "
+            f"max_new_tokens = {max_prompt_len + max_new_tokens} "
+            "(the final position is reserved for parked slots); lower "
+            "max_prompt_len= or max_new_tokens=, or raise cache_len=")
+    cache = "dense" if cache is None else cache
+    if cache not in ("dense", "paged"):
+        raise ValueError(f"cache={cache!r}; expected 'dense' or 'paged'")
+    if sampling is not None:
+        from repro.serve.sampler import SamplingSpec
+        if not isinstance(sampling, SamplingSpec):
+            raise ValueError(
+                "sampling= takes a repro.serve.sampler.SamplingSpec, got "
+                f"{type(sampling).__name__}")
+    cache_spec = None
+    if cache == "dense":
+        paged_only = {"page_len": page_len, "num_pages": num_pages,
+                      "prefill_chunk": prefill_chunk}
+        bad = [k for k, v in paged_only.items() if v is not None]
+        if bad:
+            raise ValueError(f"{bad[0]}= requires cache='paged' (the dense "
+                             "cache has no page geometry)")
+    else:
+        from repro.serve.paged_cache import PagedCacheSpec
+        if page_len is None:
+            # largest divisor of cache_len not exceeding 16
+            page_len = max(d for d in range(1, min(16, cache_len) + 1)
+                           if cache_len % d == 0)
+        if page_len < 1 or cache_len % page_len:
+            raise ValueError(
+                f"page_len={page_len} must be a positive divisor of "
+                f"cache_len={cache_len} (every mapped page must be fully "
+                "overwritten by the admission prefill)")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk={prefill_chunk} must be >= 1")
+        max_requests = num_groups * group_size
+        pages_per_req = cache_len // page_len
+        # worst-case single request: prompt + all decode writes must fit,
+        # or admission could stall forever on an empty pool
+        min_pages = math.ceil((max_prompt_len + max_new_tokens - 1)
+                              / page_len)
+        if num_pages is None:
+            num_pages = max_requests * pages_per_req
+        if num_pages < min_pages:
+            raise ValueError(
+                f"num_pages={num_pages} cannot hold one worst-case request "
+                f"({min_pages} pages of page_len={page_len} for "
+                f"max_prompt_len + max_new_tokens - 1 = "
+                f"{max_prompt_len + max_new_tokens - 1} positions)")
+        cache_spec = PagedCacheSpec(page_len=page_len, num_pages=num_pages,
+                                    max_requests=max_requests,
+                                    pages_per_req=pages_per_req)
+    return (num_groups, group_size, cache_len, max_prompt_len,
+            max_new_tokens, cache, cache_spec)
+
+
 def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                    params: Optional[Dict[str, Any]], mesh, fn_wrap,
                    timeout: float, num_groups: Optional[int],
                    group_size: Optional[int], cache_len: Optional[int],
                    max_prompt_len: Optional[int],
                    max_new_tokens: Optional[int],
-                   runtime: str = "threads") -> ServeSession:
+                   runtime: str = "threads", cache: Optional[str] = None,
+                   page_len: Optional[int] = None,
+                   num_pages: Optional[int] = None, sampling=None,
+                   prefill_chunk: Optional[int] = None) -> ServeSession:
     import jax
 
     from repro.configs.base import ModelConfig
@@ -800,25 +898,20 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
         raise ValueError(
             "mode='serve' compiles a repro.configs.base.ModelConfig (or an "
             f"--arch name), got {type(cfg).__name__}")
-    num_groups = 2 if num_groups is None else num_groups
-    group_size = 2 if group_size is None else group_size
-    max_prompt_len = 64 if max_prompt_len is None else max_prompt_len
-    max_new_tokens = 64 if max_new_tokens is None else max_new_tokens
-    if num_groups < 1 or group_size < 1:
-        raise ValueError(f"num_groups={num_groups} and "
-                         f"group_size={group_size} must be >= 1")
     if mesh is None:
         mesh = jax.make_mesh((1, 1), ("data", "model"))
-    tp = plan_from_mesh(mesh).tp
-    if cache_len is None:
-        cache_len = max_prompt_len + max_new_tokens + 9
-        cache_len += -cache_len % tp
-    elif cache_len <= max_prompt_len + max_new_tokens:
-        # the last cache position is the parking slot for retired requests
+    plan = plan_from_mesh(mesh)
+    tp = plan.tp
+    (num_groups, group_size, cache_len, max_prompt_len, max_new_tokens,
+     cache, cache_spec) = _serve_options(
+        num_groups=num_groups, group_size=group_size, cache_len=cache_len,
+        max_prompt_len=max_prompt_len, max_new_tokens=max_new_tokens,
+        cache=cache, page_len=page_len, num_pages=num_pages,
+        sampling=sampling, prefill_chunk=prefill_chunk, tp=tp)
+    if cache == "paged" and (tp != 1 or plan.dp != 1):
         raise ValueError(
-            f"cache_len={cache_len} must exceed max_prompt_len + "
-            f"max_new_tokens = {max_prompt_len + max_new_tokens} "
-            "(the final position is reserved for parked slots)")
+            "cache='paged' requires a 1x1 mesh (the page gather/scatter "
+            f"programs are single-device); got dp={plan.dp}, tp={tp}")
 
     lay = stack_layout(cfg)
     n_units = len(lay.prologue) + lay.n_periods
@@ -840,11 +933,17 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                                  group_size=group_size)
     if isinstance(regs, str):
         regs = _policy_regs(regs, stages, num_groups)
+    # shared-prefix pages assume a prompt prefix's cache values are
+    # independent of the suffix — true for causal attention/SSM stacks, not
+    # under MoE capacity routing (expert drop counts see the whole prompt)
+    share_prefix = (cache == "paged"
+                    and getattr(cfg, "num_experts", 0) == 0)
     if backend == "monolithic":
         if fn_wrap is not None:
             raise ValueError("fn_wrap requires backend='actors' "
                              "(there are no stage actors to wrap)")
-        engine = InlineServeEngine(sstaged)
+        engine = InlineServeEngine(sstaged, cache_spec=cache_spec,
+                                   sampling=sampling)
         regs = None
         runtime = None
     else:
@@ -858,7 +957,9 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                                  group_size=group_size,
                                  mesh=MeshSpec.capture(mesh))
         engine = ServePipelineExecutor(sstaged, regs=regs, fn_wrap=fn_wrap,
-                                       runtime=runtime, recipe=recipe)
+                                       runtime=runtime, recipe=recipe,
+                                       cache_spec=cache_spec,
+                                       sampling=sampling)
         regs = engine.regs if engine.regs is not None else \
             _policy_regs("1f1b", stages, num_groups)
     return ServeSession(cfg=cfg, mesh=mesh, backend=backend, engine=engine,
@@ -866,7 +967,10 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                         group_size=group_size, cache_len=cache_len,
                         max_prompt_len=max_prompt_len,
                         max_new_tokens=max_new_tokens, regs=regs,
-                        timeout=timeout, runtime=runtime)
+                        timeout=timeout, runtime=runtime, cache=cache,
+                        cache_spec=cache_spec, sampling=sampling,
+                        prefill_chunk=prefill_chunk,
+                        share_prefix=share_prefix)
 
 
 def _resolve_partition(graph: LogicalGraph,
@@ -1012,7 +1116,12 @@ def compile(graph, *, mode: str = "infer",
             group_size: Optional[int] = None,
             cache_len: Optional[int] = None,
             max_prompt_len: Optional[int] = None,
-            max_new_tokens: Optional[int] = None):
+            max_new_tokens: Optional[int] = None,
+            cache: Optional[str] = None,
+            page_len: Optional[int] = None,
+            num_pages: Optional[int] = None,
+            sampling=None,
+            prefill_chunk: Optional[int] = None):
     """Compile a :class:`~repro.core.graph.LogicalGraph` into a runnable
     :class:`Session` — the single frontend over every lowering/executor path.
 
@@ -1027,7 +1136,13 @@ def compile(graph, *, mode: str = "infer",
     ``max_prompt_len``, ``max_new_tokens``; ``params`` are the model params
     (default: ``build_model(...).init(PRNGKey(0))``), ``regs`` the
     per-stage quotas (list or policy), ``backend="monolithic"`` the
-    whole-stack single-program reference.
+    whole-stack single-program reference. ``cache="paged"`` swaps the dense
+    per-group cache blocks for the preallocated page pool of
+    :mod:`repro.serve.paged_cache` (geometry via ``page_len=`` /
+    ``num_pages=``, token-identical to dense), ``sampling=`` takes a
+    :class:`repro.serve.sampler.SamplingSpec` (default: greedy), and
+    ``prefill_chunk=`` (paged only) admits long prompts as bounded chunks
+    interleaved with decode rounds.
 
     Declarative options (everything omitted is inferred):
 
@@ -1170,10 +1285,14 @@ def compile(graph, *, mode: str = "infer",
             mesh=mesh, fn_wrap=fn_wrap, timeout=timeout,
             num_groups=num_groups, group_size=group_size,
             cache_len=cache_len, max_prompt_len=max_prompt_len,
-            max_new_tokens=max_new_tokens, runtime=runtime)
+            max_new_tokens=max_new_tokens, runtime=runtime, cache=cache,
+            page_len=page_len, num_pages=num_pages, sampling=sampling,
+            prefill_chunk=prefill_chunk)
     serve_only = {"num_groups": num_groups, "group_size": group_size,
                   "cache_len": cache_len, "max_prompt_len": max_prompt_len,
-                  "max_new_tokens": max_new_tokens}
+                  "max_new_tokens": max_new_tokens, "cache": cache,
+                  "page_len": page_len, "num_pages": num_pages,
+                  "sampling": sampling, "prefill_chunk": prefill_chunk}
     bad = [k for k, v in serve_only.items() if v is not None]
     if bad:
         raise ValueError(

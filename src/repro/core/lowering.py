@@ -1241,6 +1241,14 @@ class ServeStage:
     head math as ``decode``. ``init_caches(tok) -> caches`` allocates the
     zeroed group cache; ``write_slot(caches, slot_caches, slot)`` scatters a
     freshly prefilled request into slot ``slot`` of the group cache.
+
+    ``chunk(params, caches, xin, pos0, adv) -> (stacked_out, new_caches)``:
+    one bounded chunked-prefill step — a ``lax.scan`` of the decode step
+    over ``xin``'s leading chunk axis, slot ``b`` visiting positions
+    ``pos0[b] + t * adv[b]`` (parked slots pass ``adv == 0``). The stacked
+    output's last entry is the decode output at the chunk's final position,
+    so the final chunk's logits feed first-token sampling through the same
+    head math as ``decode``.
     """
 
     index: int
@@ -1253,6 +1261,7 @@ class ServeStage:
     first: bool
     last: bool
     mesh: object = None
+    chunk: Callable = None
 
 
 class ServeStagedProgram:
@@ -1338,6 +1347,14 @@ def lower_serve_stages(cfg, mesh, params: Dict[str, Any], num_stages: int,
             f"{cfg.name}: pipelined serving needs a token frontend "
             "(encoder-decoder / embed-frontend archs are not supported)")
     plan = MeshPlan(tuple(mesh.axis_names), tuple(mesh.devices.shape))
+    if cache_len < 2:
+        # retired/empty slots decode a dummy token "parked" at the reserved
+        # position cache_len - 1; with cache_len < 2 that position would
+        # collide with position 0 of every live request's window
+        raise ValueError(
+            f"cache_len={cache_len} must be >= 2: the final cache position "
+            "(cache_len - 1) is reserved as the parking slot for "
+            "retired/empty decode slots")
     if cache_len % plan.tp:
         raise ValueError(f"cache_len={cache_len} must be divisible by the "
                          f"model-parallel degree {plan.tp}")
@@ -1435,6 +1452,24 @@ def lower_serve_stages(cfg, mesh, params: Dict[str, Any], num_stages: int,
             in_specs=(sspecs, P(), P()),
             out_specs=(pre_out_spec, one_cspecs), check=False))
 
+        def local_chunk(p, caches, xin, pos0, adv, _ld=local_decode):
+            # chunked prefill: scan the decode step over the chunk axis —
+            # slot b visits pos0[b] + t * adv[b] (parked slots: adv == 0)
+            def step(caches, inp):
+                xt, t = inp
+                out, caches = _ld(p, caches, xt, pos0 + t * adv)
+                return caches, out
+
+            ts = jnp.arange(xin.shape[0], dtype=jnp.int32)
+            caches, outs = jax.lax.scan(step, caches, (xin, ts))
+            return outs, caches
+
+        chunk_out_spec = P(None, dp, mx) if last else P(None, dp)
+        chunk = jax.jit(shard_map(
+            local_chunk, mesh=mesh,
+            in_specs=(sspecs, grp_cspecs, P(None, dp), P(dp), P(dp)),
+            out_specs=(chunk_out_spec, grp_cspecs), check=False))
+
         def local_init(tok, _lo=lo, _hi=hi):
             full = make_decode_caches(cfg, plan, tok.shape[0], cache_len)
             return _serve_subtree(full, _lo, _hi, n_pro, True)
@@ -1458,6 +1493,6 @@ def lower_serve_stages(cfg, mesh, params: Dict[str, Any], num_stages: int,
             index=s, decode=decode, prefill=prefill,
             init_caches=init_caches, write_slot=write_slot,
             params=sparams, units=(lo, hi), first=first, last=last,
-            mesh=mesh))
+            mesh=mesh, chunk=chunk))
     return ServeStagedProgram(cfg, plan, mesh, stages, cache_len,
                               max_prompt_len, group_size)

@@ -1416,70 +1416,182 @@ class PrefillWork:
 
     ``tokens`` is (1, prompt_len) int32 (batch-replicated); ``last_index``
     is the prompt's final position — the first generated token's logits are
-    gathered there through the decode head."""
+    gathered there through the decode head. Under ``cache="paged"``,
+    ``sid`` is the request's slot id in the page pool and ``row`` its
+    *write* page-table row (shared-prefix entries masked to ``-1``)."""
 
     group: int
     slot: int
     tokens: Any
     last_index: int
+    sid: int = -1
+    row: Any = None
 
 
 @dataclasses.dataclass
 class DecodeWork:
     """Advance every slot of ``group`` by one token. ``tok``/``pos`` are
-    (group_size,) int32; retired slots are parked (see ServeSession)."""
+    (group_size,) int32; retired slots are parked (see ServeSession).
+    Under ``cache="paged"``, ``sids``/``rows`` carry each slot's pool id
+    and page-table row (``-1`` rows for parked or mid-chunk slots)."""
 
     group: int
     tok: Any
     pos: Any
+    sids: Any = None
+    rows: Any = None
 
 
-def serve_stage_apply(stage, caches: Dict[int, Any], work, xin):
+@dataclasses.dataclass
+class PrefillChunkWork:
+    """One bounded chunked-prefill step for slot ``(group, slot)``
+    (``cache="paged"`` only): the stage's scan-of-decode chunk program over
+    ``toks`` (chunk_len, group_size), slot ``b`` visiting positions
+    ``pos0[b] + t * adv[b]``. Non-owner columns are parked no-ops
+    (``adv == 0``, table row ``-1``) so the group program keeps one fixed
+    shape per chunk length. ``sids_in`` gates the state-row gather (``-1``
+    on the first chunk: recurrent state starts from exact zeros),
+    ``sids_out`` the state-row scatter. ``final`` marks the chunk whose
+    last-position logits produce the request's first token."""
+
+    group: int
+    slot: int
+    toks: Any
+    pos0: Any
+    adv: Any
+    rows: Any
+    sids_in: Any
+    sids_out: Any
+    final: bool
+
+
+def _work_input(work):
+    """The first stage's input tensor for a work item: prompt ids for a
+    prefill, the chunk token matrix for a chunk, last tokens for a decode."""
+    if isinstance(work, PrefillWork):
+        return work.tokens
+    if isinstance(work, PrefillChunkWork):
+        return work.toks
+    return work.tok
+
+
+class DenseStageCache:
+    """The dense per-group cache dict behind a stage-cache interface: one
+    ``(group_size, cache_len, ...)`` block per slot group, allocated lazily
+    the first time the group reaches the stage. This is the PR-5 semantics,
+    bit for bit — the reference the paged cache is checked against."""
+
+    def __init__(self, stage, group_size: int):
+        self.stage = stage
+        self.group_size = group_size
+        self.caches: Dict[int, Any] = {}
+
+    def _ensure(self, group: int) -> None:
+        if group not in self.caches:
+            import jax.numpy as jnp
+
+            tok = jnp.zeros((self.group_size,), jnp.int32)
+            self.caches[group] = self.stage.init_caches(tok)
+
+    def write_prefill(self, work, slot_caches) -> None:
+        self._ensure(work.group)
+        self.caches[work.group] = self.stage.write_slot(
+            self.caches[work.group], slot_caches, work.slot)
+
+    def run_decode(self, work, xin):
+        import jax
+
+        self._ensure(work.group)
+        xout, new_caches = self.stage.decode(
+            self.stage.params, self.caches[work.group], xin, work.pos)
+        xout = jax.block_until_ready(xout)
+        self.caches[work.group] = new_caches
+        return xout
+
+    def run_chunk(self, work, xin):
+        raise RuntimeError(
+            "chunked prefill (PrefillChunkWork) requires cache='paged'; the "
+            "dense cache admits whole prompts only")
+
+
+def make_stage_cache(stage, group_size: int, cache_len: int, spec=None):
+    """One stage's serving cache: dense per-group blocks, or the paged
+    slab pool when a :class:`repro.serve.paged_cache.PagedCacheSpec` is
+    given."""
+    if spec is None:
+        return DenseStageCache(stage, group_size)
+    from repro.serve.paged_cache import PagedStageCache
+
+    return PagedStageCache(stage, group_size, cache_len, spec)
+
+
+def serve_stage_apply(stage, cache, work, xin):
     """Run one work item through one serve stage, updating the stage's
-    per-group cache dict in place. Returns the stage's output tensor (the
-    hidden mid-pipeline, the logits on the last stage). Shared by the actor
+    persistent cache in place. ``cache`` is a :class:`DenseStageCache` /
+    ``PagedStageCache`` (or the bare dense per-group dict, accepted for
+    compatibility). Returns the stage's output tensor (the hidden
+    mid-pipeline, the logits on the last stage). Shared by the actor
     executor and the monolithic serve engine so their math is identical."""
     import jax
     import jax.numpy as jnp
 
+    if isinstance(cache, dict):
+        dense = DenseStageCache(stage, 0)
+        dense.caches = cache
+        dense._ensure = lambda group: None      # caller pre-allocated
+        cache = dense
     if isinstance(work, PrefillWork):
         li = jnp.full((work.tokens.shape[0],), work.last_index, jnp.int32)
         xout, slot_caches = stage.prefill(stage.params, xin, li)
         xout = jax.block_until_ready(xout)
-        caches[work.group] = stage.write_slot(caches[work.group],
-                                              slot_caches, work.slot)
-    else:
-        xout, new_caches = stage.decode(stage.params, caches[work.group],
-                                        xin, work.pos)
-        xout = jax.block_until_ready(xout)
-        caches[work.group] = new_caches
-    return xout
+        cache.write_prefill(work, slot_caches)
+        return xout
+    if isinstance(work, PrefillChunkWork):
+        return cache.run_chunk(work, xin)
+    return cache.run_decode(work, xin)
 
 
 class _ServeEngineBase:
-    """Shared state of the inline serving engine: per-stage, per-group
-    persistent caches (``caches[s][g]``, the register stream that outlives
-    every round) and round instrumentation."""
+    """Shared state of the inline serving engine: one persistent stage
+    cache per stage (dense per-group blocks or the paged slab pool — the
+    register stream that outlives every round), the optional sampler
+    stream, and round instrumentation."""
 
-    def _init_serve_state(self, sstaged) -> None:
+    def _init_serve_state(self, sstaged, cache_spec=None,
+                          sampling=None) -> None:
         self.sstaged = sstaged
-        self.caches: List[Dict[int, Any]] = [dict() for _ in sstaged.stages]
+        self.cache_spec = cache_spec
+        self.sampling = sampling
+        self.stage_caches = [
+            make_stage_cache(stage, sstaged.group_size, sstaged.cache_len,
+                             cache_spec)
+            for stage in sstaged.stages]
+        self.sampler = None
+        if sampling is not None:
+            from repro.serve.sampler import SamplerStream
+
+            self.sampler = SamplerStream(sampling, sstaged.cfg.vocab_size)
         self.rounds = 0
         self.total_makespan = 0.0
-
-    def ensure_group(self, group: int) -> None:
-        """Allocate the zeroed per-stage caches for a new slot group."""
-        if group in self.caches[0]:
-            return
-        import jax.numpy as jnp
-
-        tok = jnp.zeros((self.sstaged.group_size,), jnp.int32)
-        for s, stage in enumerate(self.sstaged.stages):
-            self.caches[s][group] = stage.init_caches(tok)
 
     def _count_round(self) -> None:
         self.rounds += 1
         self.total_makespan += self.last_makespan
+
+
+def _finish_round_item(sampler, work, logits):
+    """Shape one round result. Without a sampler the result is the raw
+    logits (the PR-5 protocol, untouched). With one, it is
+    ``{"logits", "tokens"}`` — the sampler key advances once per
+    token-producing item (never for a non-final chunk), in work order, so
+    every backend/runtime consumes the key stream identically."""
+    if sampler is None:
+        return logits
+    if isinstance(work, PrefillChunkWork):
+        if not work.final:
+            return {"logits": logits, "tokens": None}
+        return {"logits": logits, "tokens": sampler.sample(logits[-1])}
+    return {"logits": logits, "tokens": sampler.sample(logits)}
 
 
 class InlineServeEngine(_ServeEngineBase):
@@ -1488,19 +1600,18 @@ class InlineServeEngine(_ServeEngineBase):
     ``lower_serve_stages(num_stages=1)`` program — the reference the
     pipelined engine is checked against, token for token."""
 
-    def __init__(self, sstaged):
-        self._init_serve_state(sstaged)
+    def __init__(self, sstaged, cache_spec=None, sampling=None):
+        self._init_serve_state(sstaged, cache_spec, sampling)
         self.last_makespan: Optional[float] = None
 
     def run_round(self, work: Sequence, timeout: float = 300.0) -> List:
         t0 = time.perf_counter()
         results = []
         for w in work:
-            self.ensure_group(w.group)
-            xin = w.tokens if isinstance(w, PrefillWork) else w.tok
-            for s, stage in enumerate(self.sstaged.stages):
-                xin = serve_stage_apply(stage, self.caches[s], w, xin)
-            results.append(xin)
+            xin = _work_input(w)
+            for cache in self.stage_caches:
+                xin = serve_stage_apply(cache.stage, cache, w, xin)
+            results.append(_finish_round_item(self.sampler, w, xin))
         self.last_makespan = time.perf_counter() - t0
         self._count_round()
         return results
@@ -1508,6 +1619,7 @@ class InlineServeEngine(_ServeEngineBase):
 
 def serve_stage_actor_specs(sstaged, regs: Optional[Sequence[int]] = None,
                             fn_wrap: Optional[Callable] = None,
+                            cache_spec=None, sampling=None,
                             ) -> Tuple[List[ActorSpec], str]:
     """Build the persistent serve actor graph: an ``admit`` source emitting
     the round's work items (delivered via ``ctx["admit"]``, with ``fires``
@@ -1534,22 +1646,27 @@ def serve_stage_actor_specs(sstaged, regs: Optional[Sequence[int]] = None,
         wants_version=True, on_epoch=on_epoch)]
 
     def make_stage_fn(stage):
-        caches: Dict[int, Any] = {}
+        cache = make_stage_cache(stage, sstaged.group_size,
+                                 sstaged.cache_len, cache_spec)
+        sampler = None
+        if stage.last and sampling is not None:
+            from repro.serve.sampler import SamplerStream
+
+            # the sampler key stream is closure state of the LAST stage
+            # actor (resident in that stage's worker), advanced once per
+            # token-producing fire — fires are FIFO in submission order,
+            # so the stream is identical across runtimes and backends
+            sampler = SamplerStream(sampling, sstaged.cfg.vocab_size)
 
         def run_stage(payload):
-            import jax.numpy as jnp
-
             work = payload["work"]
-            if work.group not in caches:
-                tok = jnp.zeros((sstaged.group_size,), jnp.int32)
-                caches[work.group] = stage.init_caches(tok)
             xin = payload.get("x")
             if xin is None:                       # first stage: token ids in
-                xin = (work.tokens if isinstance(work, PrefillWork)
-                       else work.tok)
-            xout = serve_stage_apply(stage, caches, work, xin)
+                xin = _work_input(work)
+            xout = serve_stage_apply(stage, cache, work, xin)
             if stage.last:
-                return {"work": work, "logits": xout}
+                return {"work": work,
+                        "result": _finish_round_item(sampler, work, xout)}
             return {"work": work, "x": xout}
         return run_stage
 
@@ -1565,16 +1682,23 @@ def serve_stage_actor_specs(sstaged, regs: Optional[Sequence[int]] = None,
 
 
 class ServeSpecBuilder(_SpecBuilderBase):
-    """Picklable builder of the continuous-batching serve actor graph."""
+    """Picklable builder of the continuous-batching serve actor graph.
+    ``cache_spec``/``sampling`` are frozen dataclasses, so the paged-pool
+    geometry and the sampler seed ride the pickle into process workers."""
 
-    def __init__(self, regs=None, fn_wrap=None, staged=None, recipe=None):
+    def __init__(self, regs=None, fn_wrap=None, staged=None, recipe=None,
+                 cache_spec=None, sampling=None):
         super().__init__(staged=staged, recipe=recipe)
         self.regs = None if regs is None else list(regs)
         self.fn_wrap = fn_wrap
+        self.cache_spec = cache_spec
+        self.sampling = sampling
 
     def __call__(self):
         return serve_stage_actor_specs(self.staged, regs=self.regs,
-                                       fn_wrap=self.fn_wrap)
+                                       fn_wrap=self.fn_wrap,
+                                       cache_spec=self.cache_spec,
+                                       sampling=self.sampling)
 
 
 class ServePipelineExecutor(_StagedExecutorBase):
@@ -1598,23 +1722,29 @@ class ServePipelineExecutor(_StagedExecutorBase):
 
     def __init__(self, sstaged, regs: Optional[Sequence[int]] = None,
                  fn_wrap: Optional[Callable] = None,
-                 runtime: str = "threads", recipe=None):
+                 runtime: str = "threads", recipe=None,
+                 cache_spec=None, sampling=None):
         super().__init__(sstaged, [], 1, regs, fn_wrap,
                          runtime=runtime, recipe=recipe)
         if self.regs is not None:
             self.regs = _validate_regs(self.regs, sstaged.num_stages)
         self.sstaged = sstaged
+        self.cache_spec = cache_spec
+        self.sampling = sampling
         self.rounds = 0
         self.total_makespan = 0.0
 
     def _make_builder(self):
         return ServeSpecBuilder(regs=self.regs, fn_wrap=self.fn_wrap,
-                                staged=self.sstaged, recipe=self.recipe)
+                                staged=self.sstaged, recipe=self.recipe,
+                                cache_spec=self.cache_spec,
+                                sampling=self.sampling)
 
     def run_round(self, work: Sequence, timeout: float = 300.0) -> List:
-        """Stream ``work`` (PrefillWork/DecodeWork items) through the stage
-        actors; returns the last stage's logits, one entry per item in
-        submission order."""
+        """Stream ``work`` (PrefillWork/PrefillChunkWork/DecodeWork items)
+        through the stage actors; returns one entry per item in submission
+        order — the last stage's logits, or ``{"logits", "tokens"}`` dicts
+        when sampling is on."""
         if not work:
             return []
         work = list(work)
@@ -1629,4 +1759,4 @@ class ServePipelineExecutor(_StagedExecutorBase):
         self.rounds += 1
         self.total_makespan += self.last_makespan
         # the final stage fires in FIFO submission order in one worker
-        return [o["logits"] for o in outs]
+        return [o["result"] for o in outs]

@@ -255,3 +255,143 @@ class TestServeValidation:
                 [(np.zeros(4, np.int32), max(GENS) + 1)])
         with pytest.raises(ValueError, match="non-empty"):
             actor_session.generate([(np.zeros(0, np.int32), 1)])
+
+
+class TestAdmissionEdgeCases:
+    def test_empty_request_list(self, mono_session):
+        outs = mono_session.generate([])
+        assert outs == []
+        assert mono_session.last_stats["requests"] == 0
+        assert mono_session.last_stats["tokens"] == 0
+
+    def test_more_requests_than_slots(self, serve_env, actor_session,
+                                      mono_session):
+        """6 requests over 2 decode slots: everything beyond the first two
+        waits in the admission queue and lands mid-flight, FIFO."""
+        cfg, mesh, params, prompts = serve_env
+        reqs = [(prompts[i % len(prompts)], 2 + i % 3) for i in range(6)]
+        a = actor_session.generate(reqs)
+        b = mono_session.generate(reqs)
+        assert [len(o) for o in a] == [2 + i % 3 for i in range(6)]
+        for i, (x, y) in enumerate(zip(a, b)):
+            assert np.array_equal(x, y), f"request {i}: {x} != {y}"
+        assert mono_session.last_stats["admitted_mid_flight"] == 4
+
+    def test_prompt_exactly_max_prompt_len(self, serve_env, mono_session):
+        """The boundary length is admissible; one past it is not (the
+        rejection is covered in TestServeValidation)."""
+        cfg, mesh, params, prompts = serve_env
+        assert prompts[0].size == mono_session.max_prompt_len
+        outs = mono_session.generate([(prompts[0], 3)])
+        assert len(outs) == 1 and outs[0].shape == (3,)
+
+    def test_all_requests_retire_same_round(self, serve_env, actor_session,
+                                            mono_session):
+        """Both slots retire in the same round; the scheduler must drain
+        cleanly with nothing left to admit."""
+        cfg, mesh, params, prompts = serve_env
+        reqs = [(prompts[0], 3), (prompts[1], 3)]
+        a = actor_session.generate(reqs)
+        b = mono_session.generate(reqs)
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y)
+        assert [len(o) for o in a] == [3, 3]
+        assert mono_session.last_stats["admitted_mid_flight"] == 0
+
+
+class TestSamplerStream:
+    def _spec(self, **over):
+        from repro.serve import SamplingSpec
+        kw = dict(temperature=0.8, top_k=50, top_p=0.95, seed=7)
+        kw.update(over)
+        return SamplingSpec(**kw)
+
+    def _session(self, serve_env, **over):
+        cfg, mesh, params, _ = serve_env
+        kw = dict(params=params, mesh=mesh, num_groups=2, group_size=1,
+                  max_prompt_len=PROMPT_LEN, max_new_tokens=max(GENS),
+                  cache_len=CACHE_LEN)
+        kw.update(over)
+        return api.compile(cfg, mode="serve", **kw)
+
+    def test_temperature_zero_is_bitwise_greedy(self, serve_env,
+                                                mono_session):
+        """temperature=0 routes through greedy_from_logits itself, so the
+        stream is bit-identical to the unsampled session."""
+        cfg, mesh, params, prompts = serve_env
+        reqs = list(zip(prompts, GENS))
+        sess = self._session(serve_env, backend="monolithic",
+                             sampling=self._spec(temperature=0))
+        got = sess.generate(reqs)
+        want = mono_session.generate(reqs)
+        for i, (x, y) in enumerate(zip(got, want)):
+            assert np.array_equal(x, y), f"request {i}: {x} != {y}"
+
+    def test_fixed_seed_actors_match_monolithic(self, serve_env):
+        """One RNG register stream keyed only by round order and slot id:
+        the actor pipeline must replay the monolithic stream exactly."""
+        cfg, mesh, params, prompts = serve_env
+        reqs = list(zip(prompts, GENS))
+        mono = self._session(serve_env, backend="monolithic",
+                             sampling=self._spec())
+        want = mono.generate(reqs)
+        with self._session(serve_env, backend="actors", stages=2,
+                           sampling=self._spec()) as sess:
+            got = sess.generate(reqs)
+        for i, (x, y) in enumerate(zip(got, want)):
+            assert np.array_equal(x, y), f"request {i}: {x} != {y}"
+        assert all((o >= 0).all() and (o < cfg.vocab_size).all()
+                   for o in want)
+        # a different seed must change at least one stream
+        other = self._session(serve_env, backend="monolithic",
+                              sampling=self._spec(seed=8)).generate(reqs)
+        assert any(not np.array_equal(x, y) for x, y in zip(want, other))
+
+    def test_fixed_seed_threads_match_processes(self, serve_env):
+        """The sampler key lives in the last stage's worker; thread and
+        process runtimes must emit identical streams for the same seed."""
+        cfg, mesh, params, prompts = serve_env
+        reqs = list(zip(prompts, GENS))
+        with self._session(serve_env, backend="actors", stages=2,
+                           sampling=self._spec()) as thr:
+            a = thr.generate(reqs)
+        with self._session(serve_env, backend="actors", stages=2,
+                           runtime="processes",
+                           sampling=self._spec()) as proc:
+            b = proc.generate(reqs)
+        for i, (x, y) in enumerate(zip(a, b)):
+            assert np.array_equal(x, y), f"request {i}: {x} != {y}"
+
+    def test_sampling_spec_validation(self, serve_env):
+        from repro.serve import SamplingSpec
+        with pytest.raises(ValueError, match="temperature"):
+            SamplingSpec(temperature=-0.5)
+        with pytest.raises(ValueError, match="top_k"):
+            SamplingSpec(top_k=-1)
+        with pytest.raises(ValueError, match="top_p"):
+            SamplingSpec(top_p=0.0)
+        cfg, mesh, params, _ = serve_env
+        with pytest.raises(ValueError, match="SamplingSpec"):
+            self._session(serve_env, sampling="nucleus")
+
+
+class TestServeOptionValidation:
+    def test_geometry_error_names_all_three_options(self, serve_env):
+        """Satellite: the compile-time budget check must name every knob
+        the user could turn."""
+        cfg, mesh, params, _ = serve_env
+        with pytest.raises(ValueError) as e:
+            api.compile(cfg, mode="serve", max_prompt_len=12,
+                        max_new_tokens=12, cache_len=24)
+        msg = str(e.value)
+        for name in ("max_prompt_len", "max_new_tokens", "cache_len"):
+            assert name in msg, f"{name!r} missing from: {msg}"
+
+    def test_tiny_cache_len_names_parking_slot(self, serve_env):
+        """cache_len < 2 leaves no room for the parking position
+        (cache_len - 1); the lowering error says so explicitly."""
+        cfg, mesh, params, _ = serve_env
+        from repro.core.lowering import lower_serve_stages
+        with pytest.raises(ValueError, match="parking"):
+            lower_serve_stages(cfg, mesh, params, num_stages=1,
+                               cache_len=1, max_prompt_len=1, group_size=1)
