@@ -47,7 +47,6 @@ def main():
     from repro.train.steps import make_graph_train_step
 
     import jax
-    import jax.numpy as jnp
 
     devs = jax.devices()
     if len(devs) < STAGES:

@@ -12,8 +12,7 @@ def main():
 
     sys.path.insert(0, "src")
     from benchmarks._util import emit
-    from repro.data.pipeline import (ActorDataPipeline, SyncDataPipeline,
-                                     SyntheticLM)
+    from repro.data.pipeline import ActorDataPipeline, SyncDataPipeline
 
     vocab, batch, seq, n = 1024, 8, 512, 30
     compute_s = 0.01             # simulated train-step time

@@ -67,10 +67,10 @@ def main():
         # per-device param + optimizer state bytes
         def bytes_per_dev(tree):
             total = 0
-            for l in jax.tree.leaves(tree):
-                if hasattr(l, "sharding"):
-                    shard = l.sharding.shard_shape(l.shape)
-                    total += int(np.prod(shard)) * l.dtype.itemsize
+            for leaf in jax.tree.leaves(tree):
+                if hasattr(leaf, "sharding"):
+                    shard = leaf.sharding.shard_shape(leaf.shape)
+                    total += int(np.prod(shard)) * leaf.dtype.itemsize
             return total
 
         mem = bytes_per_dev(params) + bytes_per_dev(opt)

@@ -1,0 +1,133 @@
+"""Static plan verifier: the checks must stay cheap enough to run on every
+compile.
+
+``api.compile(..., check="static")`` runs the deadlock, SBP-legality and
+memory-bound passes before any actor fires, so their cost is paid by every
+session.  Two measurements keep that cost honest:
+
+* the deepseek-v3-671b proxy stack (61 layers, d_model 7168) cut into 8
+  stages — the largest plan in the config zoo, analyzed exactly the way
+  ``python -m repro.analysis`` does (plan SBP, partition, skeleton, all
+  passes), gated at under 5 seconds for the analyzer portion;
+* a real compiled 4-stage train session re-checked with
+  ``analysis.run_session_checks`` — the per-compile overhead users see.
+
+Both runs must report PASS — a FAIL here means the analyzer regressed on
+plans the executors demonstrably run.
+
+Writes ``BENCH_static_analysis.json``.  ``BENCH_SMOKE=1`` does one
+repetition instead of three; the gates still run.
+"""
+import json
+import os
+import pathlib
+import sys
+import time
+
+STAGES_BIG = 8
+STAGES_TRAIN = 4
+MICROBATCHES = 8
+BATCH = 8
+WIDTH = 16
+MAX_ANALYZER_SECONDS = 5.0      # gate: static checks on the biggest plan
+
+
+def main():
+    sys.path.insert(0, "src")
+    import numpy as np
+
+    from benchmarks._util import emit
+    from repro import analysis, api
+    from repro.analysis import membound
+    from repro.analysis.__main__ import build_stack_graph, parse_regs
+    from repro.analysis.skeleton import train_spec_skeleton
+    from repro.configs.registry import get_config
+    from repro.core.graph import LogicalGraph, partition_stages
+    from repro.core.placement import Placement
+    from repro.core.planner import plan as plan_sbp
+
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    reps = 1 if smoke else 3
+
+    # --- 1) the biggest zoo plan, analyzed the way the CLI does -----------
+    cfg = get_config("deepseek-v3-671b")
+    regs = parse_regs("1f1b", STAGES_BIG, MICROBATCHES)
+    graph = build_stack_graph(cfg.num_layers, cfg.d_model, STAGES_BIG)
+    plan = plan_sbp(graph)
+    partition = partition_stages(graph)
+    specs = train_spec_skeleton(STAGES_BIG, MICROBATCHES, regs)
+
+    best = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        memory = membound.stage_boundary_bound(
+            graph, plan, partition, regs, MICROBATCHES)
+        report = analysis.run_static_checks(
+            specs=specs, graph=graph, plan=plan, partition=partition,
+            memory=memory)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+        if report.verdict != "PASS":
+            raise RuntimeError(
+                f"analyzer rejected the {cfg.name} plan:\n"
+                + report.describe())
+    emit("static_analysis/deepseek_v3_671b", best * 1e6,
+         f"layers={cfg.num_layers};stages={STAGES_BIG};"
+         f"edges={report.checked_edges}")
+
+    # --- 2) re-check of a real compiled 4-stage train session -------------
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (BATCH, WIDTH))
+    labels = g.input("labels", (BATCH,), dtype="int32")
+    for i in range(STAGES_TRAIN):
+        w = g.input(f"w{i}", (WIDTH, WIDTH))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < STAGES_TRAIN - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+
+    rng = np.random.default_rng(0)
+    params = {f"w{i}": (rng.normal(size=(WIDTH, WIDTH)) * 0.1)
+              .astype(np.float32) for i in range(STAGES_TRAIN)}
+    sess = api.compile(g, mode="train", stages=STAGES_TRAIN,
+                       params=params, num_microbatches=MICROBATCHES)
+    try:
+        best_sess = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            session_report = analysis.run_session_checks(sess)
+            dt = time.perf_counter() - t0
+            best_sess = dt if best_sess is None else min(best_sess, dt)
+        if session_report.verdict != "PASS":
+            raise RuntimeError("analyzer rejected a compiled train session:\n"
+                               + session_report.describe())
+    finally:
+        sess.close()
+    emit("static_analysis/train_session_recheck", best_sess * 1e6,
+         f"stages={STAGES_TRAIN};edges={session_report.checked_edges}")
+
+    out = {
+        "model": cfg.name,
+        "layers": cfg.num_layers, "d_model": cfg.d_model,
+        "stages_big": STAGES_BIG, "microbatches": MICROBATCHES,
+        "analyzer_seconds_deepseek": best,
+        "max_analyzer_seconds": MAX_ANALYZER_SECONDS,
+        "checked_edges_deepseek": report.checked_edges,
+        "train_session_stages": STAGES_TRAIN,
+        "analyzer_seconds_train_session": best_sess,
+        "verdicts": {"deepseek": report.verdict,
+                     "train_session": session_report.verdict},
+    }
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "BENCH_static_analysis.json")
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    if best > MAX_ANALYZER_SECONDS:
+        raise RuntimeError(
+            f"static analysis took {best:.2f}s on the {cfg.name} plan, "
+            f"over the {MAX_ANALYZER_SECONDS}s budget — too slow to run "
+            f"on every compile")
+
+
+if __name__ == "__main__":
+    main()

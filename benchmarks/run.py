@@ -30,6 +30,10 @@ subprocesses with placeholder host devices (the main process keeps 1 device).
               BENCH_paged_serve.json: dense per-slot cache vs paged pool
               on short-request serving — bitwise-gated, cache bytes
               >= 2x down, tok/s within 1.15x)
+  §4 static-> bench_static_analysis       (subprocess; also writes
+              BENCH_static_analysis.json: static verifier wall time on
+              the deepseek-v3-671b proxy plan, gated < 5s, plus the
+              per-compile re-check of a real 4-stage train session)
 
 ``--smoke`` runs only the BENCH_*.json-writing benchmarks, one repetition
 each (BENCH_SMOKE=1), so CI keeps the recording code paths honest without
@@ -48,7 +52,8 @@ import traceback
 BENCH_WRITERS = ("bench_actor_pipeline", "bench_1f1b_train",
                  "bench_1f1b_adamw", "bench_zero_adamw",
                  "bench_serve_pipeline", "bench_process_pipeline",
-                 "bench_snapshot_overhead", "bench_paged_serve")
+                 "bench_snapshot_overhead", "bench_paged_serve",
+                 "bench_static_analysis")
 
 
 def main() -> None:

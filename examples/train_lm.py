@@ -28,7 +28,6 @@ def main():
     args = ap.parse_args()
 
     import jax
-    import numpy as np
 
     from repro.configs.registry import get_config
     from repro.data.pipeline import ActorDataPipeline, SyntheticLM

@@ -50,11 +50,10 @@ from repro.core.lowering import (OptimizerSpec, PrecisionPolicy, lower_plan,
                                  reassemble_sinks, split_microbatches)
 from repro.core.planner import Plan, plan as plan_sbp
 from repro.runtime.base import RUNTIME_KINDS
-from repro.runtime.pipeline import (ActorPipelineExecutor, DecodeWork,
-                                    InlineServeEngine, PipelinePlan,
-                                    PrefillWork, ServePipelineExecutor,
-                                    TrainPipelineExecutor, check_run_inputs,
-                                    plan_registers)
+from repro.runtime.pipeline import (
+    ActorPipelineExecutor, InlineServeEngine, PipelinePlan,
+    ServePipelineExecutor, TrainPipelineExecutor, check_run_inputs,
+    plan_registers)
 from repro.runtime.recipes import (InferRecipe, MeshSpec, ServeRecipe,
                                    TrainRecipe)
 
@@ -372,6 +371,7 @@ class Session:
         self.num_microbatches = num_microbatches
         self.timeout = timeout
         self.history: List[Dict[str, Any]] = []
+        self.static_report = None     # repro.analysis.StaticReport
         self._engine = engine
         self._sinks = graph.sinks()
 
@@ -543,6 +543,8 @@ class Session:
                 f"register plan (simulated): quota={rp.regs[0]} "
                 f"makespan={rp.makespan:.1f} "
                 f"bubble={rp.bubble_fraction:.2f}")
+        if self.static_report is not None:
+            lines.append(self.static_report.describe())
         return "\n".join(lines)
 
     def __repr__(self):
@@ -613,6 +615,7 @@ class ServeSession:
         self.share_prefix = share_prefix
         self.history: List[Dict[str, Any]] = []
         self.last_stats: Optional[Dict[str, Any]] = None
+        self.static_report = None     # repro.analysis.StaticReport
         self._engine = engine
 
     @property
@@ -786,6 +789,8 @@ class ServeSession:
                             f"seed={sp.seed}")
         if self.regs is not None:
             lines.append(f"register quotas: {self.regs}")
+        if self.static_report is not None:
+            lines.append(self.static_report.describe())
         return "\n".join(lines)
 
     def __repr__(self):
@@ -883,7 +888,8 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                    runtime: str = "threads", cache: Optional[str] = None,
                    page_len: Optional[int] = None,
                    num_pages: Optional[int] = None, sampling=None,
-                   prefill_chunk: Optional[int] = None) -> ServeSession:
+                   prefill_chunk: Optional[int] = None,
+                   check: str = "static") -> ServeSession:
     import jax
 
     from repro.configs.base import ModelConfig
@@ -962,7 +968,7 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                                        sampling=sampling)
         regs = engine.regs if engine.regs is not None else \
             _policy_regs("1f1b", stages, num_groups)
-    return ServeSession(cfg=cfg, mesh=mesh, backend=backend, engine=engine,
+    sess = ServeSession(cfg=cfg, mesh=mesh, backend=backend, engine=engine,
                         sstaged=sstaged, num_groups=num_groups,
                         group_size=group_size, cache_len=cache_len,
                         max_prompt_len=max_prompt_len,
@@ -971,6 +977,7 @@ def _compile_serve(cfg, *, backend: str, stages: Optional[int], regs,
                         cache_spec=cache_spec, sampling=sampling,
                         prefill_chunk=prefill_chunk,
                         share_prefix=share_prefix)
+    return _attach_static_report(sess, check)
 
 
 def _resolve_partition(graph: LogicalGraph,
@@ -1081,6 +1088,25 @@ def _fold_precision_options(graph, optimizer: OptimizerSpec,
                                zero_shapes=zero_shapes, precision=policy)
 
 
+def _attach_static_report(sess, check: str):
+    """Run the static plan verifier over a freshly compiled session
+    (``check="static"``, the default) and attach the report for
+    ``describe()``; a FAIL verdict closes the session's workers and raises
+    :class:`repro.analysis.AnalysisError` naming the offending cycle/edge.
+    ``check="off"`` records a SKIPPED report and returns immediately."""
+    from repro import analysis
+
+    if check == "off":
+        sess.static_report = analysis.StaticReport(verdict="SKIPPED")
+        return sess
+    report = analysis.run_session_checks(sess)
+    sess.static_report = report
+    if report.verdict == "FAIL":
+        sess.close()
+        raise analysis.AnalysisError(report)
+    return sess
+
+
 def _apply_restore(sess: "Session", restore) -> "Session":
     """Resolve ``compile(restore=<snapshot dir>)``: load the newest completed
     snapshot and install it as the session's full training state — including
@@ -1121,7 +1147,8 @@ def compile(graph, *, mode: str = "infer",
             page_len: Optional[int] = None,
             num_pages: Optional[int] = None,
             sampling=None,
-            prefill_chunk: Optional[int] = None):
+            prefill_chunk: Optional[int] = None,
+            check: str = "static"):
     """Compile a :class:`~repro.core.graph.LogicalGraph` into a runnable
     :class:`Session` — the single frontend over every lowering/executor path.
 
@@ -1221,9 +1248,20 @@ def compile(graph, *, mode: str = "infer",
     ``partition``/``stages``/``regs`` (so one kwargs dict can sweep both
     backends); ``stage_meshes`` and ``fn_wrap`` would change its execution
     and are rejected.
+
+    ``check="static"`` (the default) runs the :mod:`repro.analysis` plan
+    verifier over the compiled artifacts before returning — deadlock
+    saturation of the actor network, SBP-legality of every edge, and the
+    static per-device memory bound — and raises
+    :class:`repro.analysis.AnalysisError` on a FAIL verdict (the offending
+    cycle/edge is named; nothing has fired). ``check="off"`` skips it.
     """
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    if check not in ("static", "off"):
+        raise ValueError(
+            f"unknown check {check!r}; expected 'static' (run the "
+            "repro.analysis plan verifier at compile time) or 'off'")
     if backend not in BACKENDS:
         raise ValueError(
             f"unknown backend {backend!r}; expected one of {BACKENDS}")
@@ -1287,7 +1325,7 @@ def compile(graph, *, mode: str = "infer",
             cache_len=cache_len, max_prompt_len=max_prompt_len,
             max_new_tokens=max_new_tokens, runtime=runtime, cache=cache,
             page_len=page_len, num_pages=num_pages, sampling=sampling,
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk, check=check)
     serve_only = {"num_groups": num_groups, "group_size": group_size,
                   "cache_len": cache_len, "max_prompt_len": max_prompt_len,
                   "max_new_tokens": max_new_tokens, "cache": cache,
@@ -1369,6 +1407,7 @@ def compile(graph, *, mode: str = "infer",
                        reg_plan=None, optimizer=optimizer,
                        microbatch_inputs=microbatch_inputs,
                        num_microbatches=num_microbatches, timeout=timeout)
+        sess = _attach_static_report(sess, check)
         return _apply_restore(sess, restore)
 
     part = _resolve_partition(graph, partition, stages)
@@ -1414,6 +1453,7 @@ def compile(graph, *, mode: str = "infer",
                    optimizer=optimizer, microbatch_inputs=microbatch_inputs,
                    num_microbatches=num_microbatches, timeout=timeout,
                    runtime=runtime)
+    sess = _attach_static_report(sess, check)
     return _apply_restore(sess, restore)
 
 

@@ -8,7 +8,6 @@ d_model <= 512, <= 4 experts) of the same family.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 

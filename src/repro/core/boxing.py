@@ -14,8 +14,6 @@ Two pieces:
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
 from typing import Callable, Optional, Sequence, Tuple, Union
 
 from repro.core.sbp import B, Broadcast, NdSbp, Partial, Sbp, Split

@@ -16,7 +16,7 @@ replicated but each replica holds a different partial term, which we track via
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple, Union
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ from jax.sharding import PartitionSpec
 from repro.compat import shard_map
 from repro.core.boxing import boxing_fn
 from repro.core.placement import Placement
-from repro.core.sbp import B, Broadcast, NdSbp, Partial, Split, ndsbp
+from repro.core.sbp import Broadcast, NdSbp, Partial, Split, ndsbp
 
 
 @dataclasses.dataclass

@@ -25,17 +25,15 @@ the plan/partition/quotas and wraps the result in a uniform ``Session``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec
 
 from repro.core.boxing import boxing_fn
 from repro.core.graph import LogicalGraph, LOp, LTensor, StagePartition
 from repro.core.planner import Plan
-from repro.core.sbp import Broadcast, NdSbp, Partial, Split
+from repro.core.sbp import Broadcast, NdSbp, Split
 
 from repro.compat import shard_map
 
@@ -350,6 +348,13 @@ def _stage_interfaces(graph: LogicalGraph, plan: Plan,
 
     Shared by forward-only (:func:`lower_stages`) and training
     (:func:`lower_train_stages`) lowering.
+
+    ``boundary_sbp`` maps every stage-crossing (or sink) tensor to its
+    *materialized* signature (``_materialized`` rewrites P components to B),
+    which is the invariant the static verifier leans on:
+    :func:`repro.analysis.sbp_check.check_sbp` treats these signatures as
+    the stage-boundary ground truth (no partial value crosses a stage), and
+    :mod:`repro.analysis.membound` prices register payloads from them.
     """
     sinks = graph.sinks()
     sink_names = {t.name for t in sinks}

@@ -16,7 +16,7 @@ import dataclasses
 import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.sbp import B, Broadcast, NdSbp, P, Partial, Sbp, Split
+from repro.core.sbp import B, NdSbp, P, Partial, Sbp, Split
 
 
 @dataclasses.dataclass(frozen=True)

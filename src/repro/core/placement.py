@@ -10,9 +10,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Tuple
 
-from repro.core.sbp import Broadcast, NdSbp, Partial, Split
+from repro.core.sbp import NdSbp, Partial, Split
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,11 +23,11 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from repro.core.boxing import nd_transition_cost
-from repro.core.graph import LogicalGraph, LOp, LTensor
-from repro.core.sbp import B, Broadcast, NdSbp, Partial, Sbp, Split, ndsbp
+from repro.core.graph import LogicalGraph, LTensor
+from repro.core.sbp import Broadcast, NdSbp, Partial, Sbp, Split
 
 
 @dataclasses.dataclass

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Iterable, Sequence, Tuple, Union
+from typing import Sequence, Tuple, Union
 
 
 class Sbp:

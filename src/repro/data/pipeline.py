@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from typing import Callable, Iterator, Optional
 
 import numpy as np

@@ -11,7 +11,6 @@ EXPERIMENTS.md §Roofline as optimization headroom.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

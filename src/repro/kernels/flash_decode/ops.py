@@ -2,7 +2,6 @@
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_decode.kernel import flash_decode_pallas
 from repro.kernels.flash_decode.ref import flash_decode_partial_ref

@@ -8,7 +8,7 @@ Pallas kernel; the combine is the SBP partial-value reduction.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -82,7 +82,8 @@ def ssd_scan_pallas(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
     Q = min(chunk, L)
     pad = (-L) % Q
     if pad:
-        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        def zf(t):
+            return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
         x, dt, Bm, Cm = zf(x), zf(dt), zf(Bm), zf(Cm)
     Lp = x.shape[1]
     nc = Lp // Q

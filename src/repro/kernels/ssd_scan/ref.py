@@ -19,7 +19,6 @@ Returns y: (B, L, H, P) and the final state (B, H, P, N).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +76,8 @@ def ssd_chunked_ref(x, dt, A, Bm, Cm, D, h0=None, chunk: int = 128):
     Q = min(chunk, L)
     pad = (-L) % Q
     if pad:
-        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        def zf(t):
+            return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
         x, dt, Bm, Cm = zf(x), zf(dt), zf(Bm), zf(Cm)
     Lp = x.shape[1]
     nc = Lp // Q

@@ -28,14 +28,13 @@ import time
 
 def _build(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = False):
     import jax
-    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs.registry import get_config, get_shape, supports_shape
     from repro.launch import specs as S
     from repro.launch.mesh import make_production_mesh
-    from repro.train.steps import (batch_specs, make_serve_step,
-                                   make_train_step, plan_from_mesh)
+    from repro.train.steps import (make_serve_step, make_train_step,
+                                   plan_from_mesh)
     from repro.optim.zero import master_shapes, zero_state_shapes
 
     cfg = get_config(arch)
@@ -333,9 +332,9 @@ def analyze(lowered, mesh, cfg, shape, aux, t_compile_start=None):
     # analytic per-device bytes for the inputs (params + opt + caches + batch)
     def tree_bytes_per_device(tree):
         total = 0
-        for l in jax.tree.leaves(tree):
-            n = math.prod(l.shape) * l.dtype.itemsize
-            spec = l.sharding.spec
+        for leaf in jax.tree.leaves(tree):
+            n = math.prod(leaf.shape) * leaf.dtype.itemsize
+            spec = leaf.sharding.spec
             denom = 1
             for entry in spec:
                 names = entry if isinstance(entry, tuple) else (entry,)

@@ -1,8 +1,7 @@
 """ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation)."""
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ is used (real cluster). The data pipeline is the actor-runtime prefetcher
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 
@@ -33,7 +32,6 @@ def main():
     args = ap.parse_args()
 
     import jax
-    import numpy as np
 
     from repro.configs.registry import get_config
     from repro.data.pipeline import ActorDataPipeline, SyntheticLM

@@ -15,8 +15,7 @@ paper's partial-value signature with a non-sum reduction.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

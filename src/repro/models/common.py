@@ -10,15 +10,14 @@ from __future__ import annotations
 import dataclasses
 import math
 import functools
-from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.compat import pvary
 from repro.core.boxing import boxing_fn
-from repro.core.sbp import NdSbp, Split, ndsbp
+from repro.core.sbp import Split, ndsbp
 
 
 @dataclasses.dataclass(frozen=True)

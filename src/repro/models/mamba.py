@@ -12,7 +12,7 @@ GroupNorm with groups == tp (documented TPU adaptation; exact when tp == 1).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

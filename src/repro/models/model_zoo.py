@@ -7,12 +7,12 @@ these in the actual SPMD programs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.models.attention import kv_heads_local
 from repro.models.common import MeshPlan

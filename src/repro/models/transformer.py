@@ -20,22 +20,20 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.softmax_xent.ref import combine_stats, local_stats_ref
-from repro.models.attention import (gqa_decode, gqa_forward, gqa_specs,
-                                    init_gqa, init_mla, kv_heads_local,
-                                    kv_to_seq_sharded, mla_decode, mla_forward,
-                                    mla_specs, q_heads_local)
+from repro.models.attention import (
+    gqa_decode, gqa_forward, gqa_specs, init_gqa, init_mla,
+    kv_to_seq_sharded, mla_decode, mla_forward, mla_specs, q_heads_local)
 from repro.models.common import (MeshPlan, certified_pmean, dense_init,
                                  force_vary, rms_norm, split_keys)
-from repro.models.mamba import (init_mamba, init_mamba_state, mamba_decode,
-                                mamba_forward, mamba_specs)
+from repro.models.mamba import (
+    init_mamba, mamba_decode, mamba_forward, mamba_specs)
 from repro.models.mlp import (dense_mlp_forward, dense_mlp_specs, init_dense_mlp,
                               init_moe, moe_forward, moe_specs)
 

@@ -20,10 +20,9 @@ leaves whose per-shard grads are identical (norm scales). See
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -130,7 +130,8 @@ def _check_epoch_names(specs, ctx, fires) -> None:
 
 
 def make_runtime(kind: str, builder: SpecBuilder,
-                 collect_outputs_of=None, faults=None) -> Runtime:
+                 collect_outputs_of=None, faults=None,
+                 trace=None) -> Runtime:
     """Build a runtime of ``kind`` over the actor graph ``builder`` yields.
 
     ``"threads"`` calls the builder in-process and drives every actor on OS
@@ -139,6 +140,10 @@ def make_runtime(kind: str, builder: SpecBuilder,
     collect choice when given. ``faults`` is an optional
     :class:`repro.runtime.chaos.FaultPlan` injected deterministically into
     the engines (kill-at-fire, delayed/duplicated Reqs, dropped Acks).
+    ``trace`` is an optional :class:`repro.analysis.trace.TraceRecorder`
+    capturing every Req delivery (and applied fault) for the trace
+    sanitizer — threads runtime only, since the recorder is shared mutable
+    state the worker processes could not see.
     """
     if kind not in RUNTIME_KINDS:
         raise ValueError(
@@ -149,7 +154,11 @@ def make_runtime(kind: str, builder: SpecBuilder,
         if collect_outputs_of is not None:
             collect = collect_outputs_of
         return ThreadedRuntime(specs, collect_outputs_of=collect,
-                               faults=faults)
+                               faults=faults, trace=trace)
+    if trace is not None:
+        raise ValueError(
+            "trace= requires runtime='threads' (deliveries happen inside "
+            "worker processes the recorder cannot observe)")
     from repro.runtime.process import ProcessRuntime
     return ProcessRuntime(builder, collect_outputs_of=collect_outputs_of,
                           faults=faults)

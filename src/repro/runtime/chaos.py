@@ -135,6 +135,15 @@ class FaultInjector:
         self._fired = {}        # actor name -> cumulative fire attempts
         self._done = set()      # indices of consumed (one-shot) faults
         self._armed = len(plan.faults) > 0
+        # optional repro.analysis.trace.TraceRecorder: applied faults are
+        # logged so the trace sanitizer can report what the run absorbed
+        self.recorder = None
+
+    def _record(self, fault, msg) -> None:
+        if self.recorder is not None:
+            self.recorder.record_fault(
+                type(fault).__name__, fault.src, fault.dst,
+                getattr(msg, "version", None))
 
     # -- fire-path faults --------------------------------------------------------
     def before_fire(self, name: str) -> None:
@@ -171,16 +180,19 @@ class FaultInjector:
                 if (f.src == src_name and f.dst == dst_name
                         and (f.version is None or f.version == msg.version)):
                     self._done.add(i)
+                    self._record(f, msg)
                     out = [(m, d + f.seconds) for m, d in out]
             elif isinstance(f, DuplicateReq) and is_req:
                 if (f.src == src_name and f.dst == dst_name
                         and f.version == msg.version):
                     self._done.add(i)
+                    self._record(f, msg)
                     out = out + [(msg, 0.0)]
             elif isinstance(f, DropAck) and not is_req:
                 # Ack direction: consumer (src) -> producer (dst)
                 if (f.src == src_name and f.dst == dst_name
                         and f.version == msg.version):
                     self._done.add(i)
+                    self._record(f, msg)
                     out = []
         return out

@@ -9,7 +9,7 @@ the message suffices").
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 # Field widths (bits). Fig 8 shows node|thread|queue|actor; widths here are
 # chosen so the whole address packs into 64 bits with room at every level.

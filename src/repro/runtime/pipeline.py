@@ -51,20 +51,25 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime.actor import ActorSpec
 from repro.runtime.base import RUNTIME_KINDS, make_runtime
-from repro.runtime.scheduler import CommModel, SimResult, simulate
+from repro.runtime.scheduler import CommModel, simulate
 
 
-def _validate_regs(regs: Sequence[int], num_stages: int) -> List[int]:
+def _validate_regs(regs: Sequence[int], num_stages: int,
+                   num_microbatches: Optional[int] = None) -> List[int]:
     """Reject bad quota lists up front: a zero/negative quota would deadlock
-    (or be silently rewritten), so fail fast naming the offending stage."""
+    (or be silently rewritten), so fail fast naming the offending stage and
+    the analyzer's minimal feasible quota vector."""
     regs = list(regs)
     if len(regs) != num_stages:
         raise ValueError(f"need {num_stages} register quotas, got {len(regs)}")
     for s, r in enumerate(regs):
         if r < 1:
+            from repro.analysis.deadlock import min_feasible_stage_regs
+            feasible = min_feasible_stage_regs(num_stages, num_microbatches)
             raise ValueError(
                 f"stage {s} register quota must be >= 1, got {r} "
-                f"(regs={regs})")
+                f"(regs={regs}); minimal feasible quotas for "
+                f"{num_stages} stages: {feasible}")
     return regs
 
 
@@ -76,7 +81,7 @@ def pipeline_specs(num_stages: int, num_microbatches: int,
     devices. ``regs[s]`` is stage s's activation register quota."""
     if regs is None:
         regs = [num_stages - s for s in range(num_stages)]  # 1F1B default
-    regs = _validate_regs(regs, num_stages)
+    regs = _validate_regs(regs, num_stages, num_microbatches)
     specs: List[ActorSpec] = []
     specs.append(ActorSpec(
         name="data", fn=lambda *a: 0, inputs=(), out_regs=2,
@@ -257,10 +262,7 @@ class _StagedExecutorBase:
             raise ValueError(
                 f"num_microbatches must be >= 1, got {num_microbatches}")
         if regs is not None:
-            regs = list(regs)
-            if len(regs) != program.num_stages:
-                raise ValueError(f"need {program.num_stages} register quotas, "
-                                 f"got {len(regs)}")
+            regs = _validate_regs(regs, program.num_stages, num_microbatches)
         for n in microbatch_inputs:
             if n not in program.input_names:
                 raise ValueError(f"{n} is not a graph input")
@@ -280,6 +282,10 @@ class _StagedExecutorBase:
         self.runtime_kind = runtime
         self.recipe = recipe
         self.faults = faults          # optional chaos FaultPlan (tests/CI)
+        # optional repro.analysis.trace.TraceRecorder — set before the first
+        # run; the threads runtime logs every Req delivery into it so
+        # repro.analysis.trace.check_trace can certify the resequencer
+        self.trace = None
         self._rt = None
         self.last_makespan: Optional[float] = None
         self.last_history: Dict[str, List[Tuple[float, float]]] = {}
@@ -295,7 +301,7 @@ class _StagedExecutorBase:
         (built on first use)."""
         if self._rt is None:
             self._rt = make_runtime(self.runtime_kind, self._make_builder(),
-                                    faults=self.faults)
+                                    faults=self.faults, trace=self.trace)
         return self._rt
 
     def _run_rt(self, ctx, fires, timeout: float):
@@ -416,7 +422,7 @@ def stage_actor_specs(staged, microbatch_inputs: Sequence[str],
     S = staged.num_stages
     if regs is None:
         regs = [max(1, S - s) for s in range(S)]
-    regs = _validate_regs(regs, S)
+    regs = _validate_regs(regs, S, num_microbatches)
     mb_names = list(microbatch_inputs)
     for n in mb_names:
         if n not in staged.input_names:
@@ -643,7 +649,7 @@ def train_stage_actor_specs(tstaged, microbatch_inputs: Sequence[str],
     S = tstaged.num_stages
     if regs is None:
         regs = [max(1, S - s) for s in range(S)]
-    regs = _validate_regs(regs, S)
+    regs = _validate_regs(regs, S, num_microbatches)
     mb_names = list(microbatch_inputs)
     for n in mb_names:
         if n not in tstaged.input_names:
@@ -1726,8 +1732,6 @@ class ServePipelineExecutor(_StagedExecutorBase):
                  cache_spec=None, sampling=None):
         super().__init__(sstaged, [], 1, regs, fn_wrap,
                          runtime=runtime, recipe=recipe)
-        if self.regs is not None:
-            self.regs = _validate_regs(self.regs, sstaged.num_stages)
         self.sstaged = sstaged
         self.cache_spec = cache_spec
         self.sampling = sampling

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime.actor import Actor, ActorSpec, build_actors
 from repro.runtime.messages import Ack, Req, node_of, thread_of

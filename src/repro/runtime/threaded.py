@@ -38,7 +38,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.runtime.actor import Actor, ActorSpec, build_actors
 from repro.runtime.base import Runtime, _check_epoch_names
-from repro.runtime.messages import Ack, Req, node_of, thread_of
+from repro.runtime.messages import Req, node_of, thread_of
 
 
 def _no_remote(msg) -> None:
@@ -88,6 +88,10 @@ class _LocalEngine:
         # optional chaos layer (repro.runtime.chaos.FaultInjector): consulted
         # before every local fire and for every outgoing message
         self.fault_injector = None
+        # optional repro.analysis.trace.TraceRecorder: records every Req
+        # delivery (version + what the resequencer released) so the static
+        # trace sanitizer can certify the run restored canonical order
+        self.trace_recorder = None
         # epoch state
         self._epoch = 0
         self._mailboxes: Dict[Tuple[int, int], queue.Queue] = {}
@@ -110,6 +114,10 @@ class _LocalEngine:
         ctx = ctx or {}
         fires = fires or {}
         self._epoch += 1
+        if self.trace_recorder is not None:
+            # resequencer state resets per epoch; the trace sanitizer
+            # checks canonical order per (epoch, consumer, channel)
+            self.trace_recorder.current_epoch = self._epoch
         self._stopping = False
         for a in self.local_actors:
             a.reset(max_fires=fires.get(a.spec.name))
@@ -228,7 +236,11 @@ class _LocalEngine:
                     return
                 actor = self.by_id[msg.dst]
                 if isinstance(msg, Req):
-                    actor.on_req(msg)
+                    rec = self.trace_recorder
+                    if rec is None:
+                        actor.on_req(msg)
+                    else:
+                        self._traced_on_req(rec, actor, msg)
                 else:
                     if actor.on_ack(msg):
                         self._bump(0, -1)
@@ -238,6 +250,27 @@ class _LocalEngine:
             if self.on_error is not None:
                 self.on_error(e, key)
             self.stop_workers()
+
+    @staticmethod
+    def _traced_on_req(rec, actor: Actor, msg: Req) -> None:
+        """Deliver a Req through the resequencer while recording what it
+        did: the versions released to the FIFO (empty for a buffered early
+        arrival) and whether the message was accepted at all (duplicates
+        are dropped without an ack)."""
+        ch = msg.channel
+        before = actor.in_next.get(ch)
+        if before is None:                      # undeclared channel: FIFO
+            actor.on_req(msg)
+            rec.record_delivery(actor.spec.name, ch, msg.version,
+                                (msg.version,), 1)
+            return
+        pend_before = len(actor.in_pending[ch])
+        actor.on_req(msg)
+        stride = actor.in_stride[ch]
+        released = tuple(range(before, actor.in_next[ch], stride))
+        accepted = bool(released) or len(actor.in_pending[ch]) > pend_before
+        rec.record_delivery(actor.spec.name, ch, msg.version, released,
+                            stride, accepted)
 
     def _fire_ready(self, key: Tuple[int, int], epoch: int) -> None:
         progressed = True
@@ -292,11 +325,17 @@ class ThreadedRuntime(Runtime):
     """
 
     def __init__(self, specs: Sequence[ActorSpec],
-                 collect_outputs_of=None, faults=None):
+                 collect_outputs_of=None, faults=None, trace=None):
         self._engine = _LocalEngine(specs)
         if faults is not None:
             from repro.runtime.chaos import FaultInjector
             self._engine.fault_injector = FaultInjector(faults)
+        if trace is not None:
+            # a repro.analysis.trace.TraceRecorder; the injector (if any)
+            # also reports which faults it actually applied
+            self._engine.trace_recorder = trace
+            if self._engine.fault_injector is not None:
+                self._engine.fault_injector.recorder = trace
         self.by_name = self._engine.by_name
         self.by_id = self._engine.by_id
         self._collect_single = (collect_outputs_of is None

@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 #: cache leaves whose axis after the batch axis is the cache *position* —
 #: these are paged. Everything else (``h``/``tail_x``/``tail_bc``/cross

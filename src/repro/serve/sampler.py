@@ -60,19 +60,19 @@ def _build_sample_fn(spec: SamplingSpec, vocab_size: int):
 
     def one(key, logits):
         vp = logits.shape[-1]
-        l = jnp.where(jnp.arange(vp) >= vocab_size, -jnp.inf,
+        z = jnp.where(jnp.arange(vp) >= vocab_size, -jnp.inf,
                       logits.astype(jnp.float32))
-        l = l / t
+        z = z / t
         if 0 < k < vocab_size:
-            kth = jax.lax.top_k(l, k)[0][-1]
-            l = jnp.where(l < kth, -jnp.inf, l)
+            kth = jax.lax.top_k(z, k)[0][-1]
+            z = jnp.where(z < kth, -jnp.inf, z)
         if p < 1.0:
-            sl = jnp.sort(l)[::-1]
-            probs = jax.nn.softmax(sl)
+            sz = jnp.sort(z)[::-1]
+            probs = jax.nn.softmax(sz)
             keep = jnp.cumsum(probs) - probs < p     # top-1 always kept
-            thr = jnp.min(jnp.where(keep, sl, jnp.inf))
-            l = jnp.where(l < thr, -jnp.inf, l)
-        return jax.random.categorical(key, l).astype(jnp.int32)
+            thr = jnp.min(jnp.where(keep, sz, jnp.inf))
+            z = jnp.where(z < thr, -jnp.inf, z)
+        return jax.random.categorical(key, z).astype(jnp.int32)
 
     def batch(key, logits):
         keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(

@@ -8,8 +8,6 @@ roofline analysis parses).
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -17,16 +15,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import pvary, shard_map
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models.common import MeshPlan
 from repro.models.model_zoo import build_model, cache_specs, make_decode_caches
 from repro.optim.adamw import AdamWConfig, AdamWState
-from repro.optim.zero import (ZeroState, combine_model_grads,
-                              gather_master_local, init_zero_state_local,
-                              local_shape_of, master_specs,
-                              model_combine_tree, plain_dp_adamw_update,
-                              shard_master_local, zero_adamw_update,
-                              zero_state_specs)
+from repro.optim.zero import (
+    combine_model_grads, gather_master_local, init_zero_state_local,
+    local_shape_of, master_specs, model_combine_tree, plain_dp_adamw_update,
+    shard_master_local, zero_adamw_update, zero_state_specs)
 
 
 def plan_from_mesh(mesh) -> MeshPlan:
@@ -149,7 +145,8 @@ def make_train_step(cfg: ModelConfig, mesh, optimizer: AdamWConfig = None,
     pspecs = bundle.specs()
     bspecs = batch_specs(cfg, plan, "train")
     repl = _replication_tree(pspecs, plan)
-    is_spec = lambda s: isinstance(s, P)
+    def is_spec(s):
+        return isinstance(s, P)
     cdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
 
     def certified_mean(v):

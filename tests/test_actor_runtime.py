@@ -2,9 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.runtime import (ActorSpec, CommModel, Simulator, ThreadedRuntime,
-                           analyze, make_actor_id, parse_actor_id,
-                           pipeline_specs, plan_registers, simulate)
+from repro.runtime import (
+    ActorSpec, CommModel, ThreadedRuntime, analyze, make_actor_id,
+    parse_actor_id, pipeline_specs, plan_registers, simulate)
 
 
 def _noop(*a):

@@ -100,9 +100,10 @@ class TestProcessSessions:
                          params=dict(params), **kw)
         tp = api.compile(_graph(), runtime="processes",
                          params=dict(params), **kw)
-        mono = lambda: api.compile(_graph(), backend="monolithic",
-                                   params=dict(params), optimizer=opt,
-                                   mode="train", num_microbatches=M)
+        def mono():
+            return api.compile(_graph(), backend="monolithic",
+                               params=dict(params), optimizer=opt,
+                               mode="train", num_microbatches=M)
         try:
             api.assert_sessions_match(tt, mono(), data, steps=3)
             api.assert_sessions_match(tp, mono(), data, steps=3)

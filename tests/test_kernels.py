@@ -1,6 +1,5 @@
 """Pallas kernel tests: shape/dtype sweeps vs the pure-jnp oracles
 (interpret=True executes the kernel bodies on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,9 +9,8 @@ from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import (attention_dense_ref,
                                                flash_attention_ref)
 from repro.kernels.flash_decode.kernel import flash_decode_pallas
-from repro.kernels.flash_decode.ref import (combine_partials,
-                                            decode_attention_ref,
-                                            flash_decode_partial_ref)
+from repro.kernels.flash_decode.ref import (
+    combine_partials, decode_attention_ref)
 from repro.kernels.softmax_xent.kernel import xent_local_stats_pallas
 from repro.kernels.softmax_xent.ref import (combine_stats, local_stats_ref,
                                             softmax_xent_ref)

@@ -9,8 +9,7 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.configs.registry import ARCHITECTURES
 from repro.models.common import MeshPlan
-from repro.models.model_zoo import build_model, make_decode_caches
-from repro.models import transformer as T
+from repro.models.model_zoo import build_model
 
 ARCH_NAMES = sorted(ARCHITECTURES)
 PLAN = MeshPlan.single_device()

@@ -8,7 +8,6 @@ import pytest
 from repro.core.graph import LogicalGraph
 from repro.core.placement import Placement
 from repro.core.planner import plan
-from repro.core.sbp import ndsbp
 
 
 def mk_placement(data=2, model=4):

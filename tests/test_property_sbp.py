@@ -11,7 +11,7 @@ from hypothesis import given, settings
 
 from repro.core.boxing import nd_transition_cost, transition_cost
 from repro.core.placement import Placement
-from repro.core.sbp import B, Broadcast, NdSbp, Partial, Sbp, Split, ndsbp
+from repro.core.sbp import Broadcast, NdSbp, Partial, Split
 
 COMPONENTS = [Split(0), Split(1), Broadcast(), Partial("sum")]
 comp_st = st.sampled_from(COMPONENTS)

@@ -2,14 +2,13 @@
 
 Pure logic — no jax devices required.
 """
-import math
 
 import pytest
 
 from repro.core import ops as ops_mod
 from repro.core.boxing import nd_transition_cost, transition_cost
 from repro.core.placement import Placement
-from repro.core.sbp import B, Broadcast, NdSbp, P, Partial, S, Sbp, Split, ndsbp
+from repro.core.sbp import B, Broadcast, P, Partial, Sbp, Split, ndsbp
 
 
 class TestSbpTypes:

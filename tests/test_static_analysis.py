@@ -1,0 +1,412 @@
+"""Static plan verifier tests (repro.analysis).
+
+Oracle soundness in both directions: every plan the real compile paths
+produce must PASS, and hand-built bad plans — a quota-starved cycle, an
+illegal split signature, a partial value leaking through a sink — must be
+rejected at compile time with the offending cycle/edge named, before any
+actor fires.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import analysis, api
+from repro.analysis import membound
+from repro.analysis.__main__ import main as analysis_cli
+from repro.analysis.deadlock import (check_deadlock, min_feasible_regs,
+                                     min_feasible_stage_regs)
+from repro.analysis.sbp_check import check_sbp
+from repro.analysis.skeleton import (infer_spec_skeleton, serve_spec_skeleton,
+                                     train_spec_skeleton)
+from repro.analysis.trace import TraceRecorder, check_trace
+from repro.core.graph import LogicalGraph, partition_stages
+from repro.core.lowering import OptimizerSpec
+from repro.core.placement import Placement
+from repro.core.planner import plan as plan_sbp
+from repro.core.sbp import NdSbp
+from repro.runtime.actor import ActorSpec
+from repro.runtime.chaos import DelayEdge, DuplicateReq, FaultPlan
+from repro.runtime.pipeline import _validate_regs
+
+B, W, S, M = 8, 8, 2, 2
+
+
+def _noop(*args):
+    return 0
+
+
+def _train_graph():
+    placement = Placement(("d",), (1,), device_kind="cpu")
+    g = LogicalGraph(placement)
+    h = g.input("x", (B, W))
+    labels = g.input("labels", (B,), dtype="int32")
+    for i in range(S):
+        w = g.input(f"w{i}", (W, W))
+        h = g.matmul(h, w, name=f"mm{i}")
+        if i < S - 1:
+            h = g.unary(h, "relu", name=f"relu{i}")
+    g.softmax_xent(h, labels, name="loss")
+    return g
+
+
+def _train_params(rng=None):
+    rng = rng or np.random.default_rng(0)
+    return {f"w{i}": (rng.normal(size=(W, W)) * 0.1).astype(np.float32)
+            for i in range(S)}
+
+
+def _train_data(rng=None):
+    rng = rng or np.random.default_rng(1)
+    return {"x": rng.normal(size=(B, W)).astype(np.float32),
+            "labels": rng.integers(0, W, size=(B,)).astype(np.int32)}
+
+
+def _starved_cycle_specs(a_regs=1):
+    """The canonical quota-starved cycle: C needs a second token from A, but
+    A's sole register is parked waiting for X's ack, and X cannot fire its
+    second time until C releases A's register — a three-way wait cycle fixed
+    by giving A a second register."""
+    return [
+        ActorSpec("A", fn=_noop, inputs=(), out_regs=a_regs, max_fires=2),
+        ActorSpec("X", fn=_noop, inputs=("A",), out_regs=1, max_fires=2,
+                  emit_every=2),
+        ActorSpec("C", fn=_noop, inputs=("A", "X"), out_regs=1, max_fires=1),
+    ]
+
+
+class TestDeadlockPass:
+    def test_1f1b_train_skeleton_is_live(self):
+        for stages, mb in [(2, 4), (4, 8), (3, 3)]:
+            specs = train_spec_skeleton(stages, mb, clip=True, dynamic=True,
+                                        stateful=True, snapshot=True)
+            result = check_deadlock(specs)
+            assert result.ok, (stages, mb, result)
+            assert all(result.fired[n] == result.required[n]
+                       for n in result.fired)
+
+    def test_serial_quotas_are_live(self):
+        specs = train_spec_skeleton(4, 8, [1, 1, 1, 1])
+        assert check_deadlock(specs).ok
+
+    def test_infer_and_serve_skeletons_are_live(self):
+        assert check_deadlock(infer_spec_skeleton(3, 5)).ok
+        assert check_deadlock(serve_spec_skeleton(2, round_items=4)).ok
+
+    def test_quota_starved_cycle_is_rejected_with_cycle_named(self):
+        result = check_deadlock(_starved_cycle_specs())
+        assert not result.ok
+        assert set(result.cycle) == {"A", "X", "C"}
+        (violation,) = analysis.deadlock_violations(result)
+        assert violation.pass_name == "deadlock"
+        assert "quota-starved cycle" in violation.message
+        assert " -> ".join(result.cycle + (result.cycle[0],)) \
+            == violation.subject
+
+    def test_min_feasible_regs_fixes_the_cycle(self):
+        feasible = min_feasible_regs(_starved_cycle_specs())
+        assert feasible == {"A": 2, "X": 1}
+        fixed = _starved_cycle_specs(a_regs=feasible["A"])
+        assert check_deadlock(fixed).ok
+
+    def test_pure_starvation_has_no_cycle(self):
+        specs = [
+            ActorSpec("A", fn=_noop, inputs=(), out_regs=2, max_fires=1),
+            ActorSpec("C", fn=_noop, inputs=("A",), out_regs=1, max_fires=3),
+        ]
+        result = check_deadlock(specs)
+        assert not result.ok and result.cycle == ()
+        (violation,) = analysis.deadlock_violations(result)
+        assert "starvation" in violation.message
+        assert min_feasible_regs(specs) is None  # no quota fixes a rate gap
+
+    def test_unbounded_source_needs_fires(self):
+        specs = [ActorSpec("src", fn=_noop, inputs=(), out_regs=1),
+                 ActorSpec("sink", fn=_noop, inputs=("src",), out_regs=1,
+                           max_fires=2)]
+        with pytest.raises(ValueError, match="unbounded source"):
+            check_deadlock(specs)
+        assert check_deadlock(specs, fires={"src": 2}).ok
+
+    def test_unknown_producer_is_rejected(self):
+        specs = [ActorSpec("sink", fn=_noop, inputs=("ghost",), out_regs=1,
+                           max_fires=1)]
+        with pytest.raises(ValueError, match="unknown producer"):
+            check_deadlock(specs)
+
+    def test_min_feasible_stage_regs(self):
+        regs = min_feasible_stage_regs(4, 8)
+        assert len(regs) == 4 and all(r >= 1 for r in regs)
+        specs = train_spec_skeleton(4, 8, regs)
+        assert check_deadlock(specs).ok
+
+
+class TestSbpPass:
+    def test_real_plans_pass(self):
+        g = _train_graph()
+        plan = plan_sbp(g)
+        violations, checked = check_sbp(g, plan, partition_stages(g, S))
+        assert violations == [] and checked > 0
+
+    def test_split_indivisibility_names_the_tensor(self):
+        placement = Placement(("d",), (2,), device_kind="cpu")
+        g = LogicalGraph(placement)
+        x = g.input("x", (3, 8))
+        w = g.input("w", (8, 8))
+        g.matmul(x, w, name="y")
+        plan = plan_sbp(g)
+        bad = dataclasses.replace(
+            plan, tensor_sbp={**plan.tensor_sbp, "x": NdSbp.parse("S(0)")})
+        violations, _ = check_sbp(g, bad)
+        assert any(v.subject == "x" and "illegal for shape" in v.message
+                   for v in violations)
+
+    def test_partial_leaking_through_sink_is_named(self):
+        g = _train_graph()
+        plan = plan_sbp(g)
+        sink = g.sinks()[0].name
+        bad = dataclasses.replace(
+            plan,
+            tensor_sbp={**plan.tensor_sbp, sink: NdSbp.parse("P")},
+            boxings=[b for b in plan.boxings if b[1] != "__epilogue__"])
+        violations, _ = check_sbp(g, bad)
+        assert any(v.subject == sink and "leaks through a graph sink"
+                   in v.message for v in violations)
+
+    def test_partial_crossing_stage_boundary_is_named(self):
+        g = _train_graph()
+        plan = plan_sbp(g)
+        part = partition_stages(g, S)
+        # relu0.out is the stage-0 -> stage-1 boundary tensor
+        bad = dataclasses.replace(
+            plan, tensor_sbp={**plan.tensor_sbp,
+                              "relu0.out": NdSbp.parse("P")})
+        violations, _ = check_sbp(g, bad, part)
+        assert any("crosses the stage" in v.message for v in violations)
+        # with the lowering's materialized boundary signatures the same plan
+        # is fine: no partial actually crosses
+        materialized = {"relu0.out": NdSbp.parse("B")}
+        violations, _ = check_sbp(g, bad, part, boundary_sbp=materialized)
+        assert not any("crosses the stage" in v.message for v in violations)
+
+
+class TestCompileCheck:
+    def test_every_mode_backend_passes_by_default(self):
+        params, data = _train_params(), _train_data()
+        for backend in ("actors", "monolithic"):
+            sess = api.compile(_train_graph(), mode="train", backend=backend,
+                               stages=S, params=dict(params),
+                               num_microbatches=M)
+            try:
+                assert sess.static_report.verdict == "PASS"
+                assert "static analysis: PASS" in sess.describe()
+                assert "static peak bytes" in sess.describe()
+            finally:
+                sess.close()
+
+    def test_bad_plan_is_rejected_before_any_fire(self):
+        g = _train_graph()
+        plan = plan_sbp(g)
+        sink = g.sinks()[0].name
+        bad = dataclasses.replace(
+            plan,
+            tensor_sbp={**plan.tensor_sbp, sink: NdSbp.parse("P")},
+            boxings=[b for b in plan.boxings if b[1] != "__epilogue__"])
+        with pytest.raises(analysis.AnalysisError,
+                           match="leaks through a graph sink"):
+            api.compile(g, mode="train", stages=S,
+                        params=dict(_train_params()), num_microbatches=M,
+                        plan=bad)
+
+    def test_check_off_skips(self):
+        sess = api.compile(_train_graph(), mode="train", backend="monolithic",
+                           params=dict(_train_params()), num_microbatches=M,
+                           check="off")
+        assert sess.static_report.verdict == "SKIPPED"
+        assert "static analysis: skipped" in sess.describe()
+
+    def test_unknown_check_value_is_rejected(self):
+        with pytest.raises(ValueError, match="unknown check"):
+            api.compile(_train_graph(), mode="train", backend="monolithic",
+                        params=dict(_train_params()), check="sometimes")
+
+    def test_run_session_checks_is_rerunnable(self):
+        sess = api.compile(_train_graph(), mode="train", stages=S,
+                           params=dict(_train_params()), num_microbatches=M)
+        try:
+            report = analysis.run_session_checks(sess)
+            assert report.verdict == "PASS"
+            assert report.checked_channels > 0
+            assert all(v > 0 for v in report.peak_bytes_per_device.values())
+        finally:
+            sess.close()
+
+
+class TestSkeletonParity:
+    """The dummy-fn skeletons must mirror the real executor topologies field
+    by field, or the CLI/min-regs search analyzes a different network than
+    the one that runs."""
+
+    @staticmethod
+    def _key(s):
+        return (s.name, tuple(s.inputs), s.out_regs, s.max_fires,
+                s.emit_every, s.node, s.thread)
+
+    def test_infer_topology_matches(self):
+        g = _train_graph()
+        sess = api.compile(g, mode="infer", backend="actors", stages=S,
+                           num_microbatches=4, microbatch_inputs=["x"])
+        try:
+            real, _ = sess._engine._make_builder()()
+            skel = infer_spec_skeleton(S, 4, sess.regs)
+            assert sorted(map(self._key, real)) \
+                == sorted(map(self._key, skel))
+        finally:
+            sess.close()
+
+    def test_train_topology_matches(self):
+        opt = OptimizerSpec.adamw(lr=1e-3, grad_clip=1.0)
+        sess = api.compile(_train_graph(), mode="train", stages=S,
+                           params=dict(_train_params()), optimizer=opt,
+                           num_microbatches=M)
+        try:
+            real, _ = sess._engine._make_builder()()
+            skel = train_spec_skeleton(S, M, sess.regs, clip=True,
+                                       stateful=True)
+            assert sorted(map(self._key, real)) \
+                == sorted(map(self._key, skel))
+        finally:
+            sess.close()
+
+
+class TestQuotaValidation:
+    def test_zero_quota_error_reports_feasible_vector(self):
+        with pytest.raises(ValueError) as err:
+            _validate_regs([2, 0, 1], 3, 4)
+        assert "minimal feasible quotas" in str(err.value)
+        assert "stage 1" in str(err.value)
+
+    def test_compile_rejects_zero_quota_with_feasible_vector(self):
+        with pytest.raises(ValueError, match="minimal feasible quotas"):
+            api.compile(_train_graph(), mode="train", stages=S,
+                        params=dict(_train_params()), num_microbatches=M,
+                        regs=[1, 0])
+
+
+class TestMemoryBound:
+    def test_train_bound_covers_measured_peak(self):
+        sess = api.compile(_train_graph(), mode="train", stages=S,
+                           params=dict(_train_params()), num_microbatches=M)
+        try:
+            sess.step(**_train_data())
+            bound = sum(sess.static_report.peak_bytes_per_device.values())
+            measured = sess._engine.peak_inflight_activations
+            assert bound >= measured > 0
+        finally:
+            sess.close()
+
+    def test_optimizer_state_streams_are_counted(self):
+        g = _train_graph()
+        params = _train_params()
+        plain = api.compile(g, mode="train", backend="monolithic",
+                            params=dict(params), check="off")
+        opt = OptimizerSpec.adamw(lr=1e-3)
+        sess = api.compile(_train_graph(), mode="train", stages=S,
+                           params=dict(params), optimizer=opt,
+                           num_microbatches=M)
+        sgd = api.compile(_train_graph(), mode="train", stages=S,
+                          params=dict(params), num_microbatches=M)
+        try:
+            adamw_bytes = sum(
+                sess.static_report.peak_bytes_per_device.values())
+            sgd_bytes = sum(sgd.static_report.peak_bytes_per_device.values())
+            # AdamW adds the m/v moment streams on top of the same pipeline
+            assert adamw_bytes > sgd_bytes
+        finally:
+            plain.close()
+            sess.close()
+            sgd.close()
+
+
+class TestTraceSanitizer:
+    def test_clean_run_has_canonical_trace(self):
+        rec = TraceRecorder()
+        sess = api.compile(_train_graph(), mode="train", stages=S,
+                           params=dict(_train_params()), num_microbatches=M)
+        try:
+            sess.executor.trace = rec
+            data = _train_data()
+            sess.step(**data)
+            sess.step(**data)
+            specs, _ = sess._engine._make_builder()()
+            violations, stats = check_trace(rec, specs)
+            assert violations == []
+            assert stats.deliveries > 0 and stats.duplicates_dropped == 0
+        finally:
+            sess.close()
+
+    def test_chaos_faults_are_absorbed_and_certified(self):
+        plan = FaultPlan((DuplicateReq("f0", "f1", version=0),
+                          DelayEdge("f1", "b1", seconds=0.02, version=1)))
+        rec = TraceRecorder()
+        sess = api.compile(_train_graph(), mode="train", stages=S,
+                           params=dict(_train_params()), num_microbatches=M,
+                           faults=plan)
+        try:
+            sess.executor.trace = rec
+            sess.step(**_train_data())
+            specs, _ = sess._engine._make_builder()()
+            violations, stats = check_trace(rec, specs)
+            assert violations == []
+            assert stats.duplicates_dropped == 1
+            assert stats.faults == 2
+        finally:
+            sess.close()
+
+    def test_corrupted_trace_is_flagged(self):
+        specs = [ActorSpec("p", fn=_noop, inputs=(), out_regs=2, max_fires=2),
+                 ActorSpec("c", fn=_noop, inputs=("p",), out_regs=1,
+                           max_fires=2)]
+        rec = TraceRecorder()
+        rec.record_delivery("c", "p", 1, (1,), 1)  # released out of order
+        rec.record_delivery("c", "p", 0, (0,), 1)
+        violations, _ = check_trace(rec, specs)
+        assert any("canonical stride-1 order" in v.message
+                   for v in violations)
+
+    def test_trace_requires_threads_runtime(self):
+        from repro.runtime.base import make_runtime
+        with pytest.raises(ValueError, match="requires runtime='threads'"):
+            make_runtime("processes", lambda: ([], None),
+                         trace=TraceRecorder())
+
+
+class TestCLI:
+    def test_cli_passes_on_zoo_config(self, capsys):
+        rc = analysis_cli(["qwen3-1.7b", "--stages", "2", "--regs", "1f1b",
+                           "--microbatches", "4"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "static analysis: PASS" in out
+        assert "analyzer wall time" in out
+
+    def test_cli_infer_mode_and_explicit_regs(self, capsys):
+        rc = analysis_cli(["qwen3-1.7b", "--stages", "2", "--regs", "1,1",
+                           "--mode", "infer"])
+        assert rc == 0
+
+    def test_cli_rejects_wrong_quota_count(self, capsys):
+        rc = analysis_cli(["qwen3-1.7b", "--stages", "2", "--regs", "1,2,3"])
+        assert rc == 2
+
+
+class TestStageBoundaryBound:
+    def test_plan_level_bound_without_lowering(self):
+        g = _train_graph()
+        plan = plan_sbp(g)
+        part = partition_stages(g, S)
+        bound = membound.stage_boundary_bound(g, plan, part, [2, 1], M)
+        assert set(bound) == {"stage0", "stage1"}
+        assert all(v >= 0 for v in bound.values())
